@@ -1,0 +1,75 @@
+"""Shared benchmark scaffolding: trace suite, configs, CSV output."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.cache import SimConfig, max_hit_ratio, simulate
+from repro.cache.base import PF_AMP, PF_MITHRIL, PF_PG
+from repro.configs.mithril_paper import SUITE_MITHRIL
+from repro.traces import suite
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+CAPACITY = 512          # blocks (the paper's 256MB at 4KB blocks, scaled to
+                        # the synthetic LBA space so LRU spans 10-99% HR)
+TRACE_LEN = 40_000
+
+
+def configs(capacity: int = CAPACITY) -> Dict[str, SimConfig]:
+    return {
+        "lru": SimConfig(capacity=capacity),
+        "fifo": SimConfig(capacity=capacity, policy="fifo"),
+        "amp-lru": SimConfig(capacity=capacity, use_amp=True),
+        "pg-lru": SimConfig(capacity=capacity, use_pg=True),
+        "mithril-lru": SimConfig(capacity=capacity, use_mithril=True,
+                                 mithril=SUITE_MITHRIL),
+        "mithril-fifo": SimConfig(capacity=capacity, policy="fifo",
+                                  use_mithril=True, mithril=SUITE_MITHRIL),
+        "mithril-amp": SimConfig(capacity=capacity, use_amp=True,
+                                 use_mithril=True, mithril=SUITE_MITHRIL),
+    }
+
+
+def pf_src_of(cfg: SimConfig) -> int:
+    if cfg.use_mithril:
+        return PF_MITHRIL
+    if cfg.use_amp:
+        return PF_AMP
+    if cfg.use_pg:
+        return PF_PG
+    return 0
+
+
+def run_suite(names, n_traces: int = 20, trace_len: int = TRACE_LEN,
+              capacity: int = CAPACITY):
+    """Simulate the chosen config names over the synthetic suite.
+
+    Yields (trace_name, trace, {config: SimResult})."""
+    cfgs = {k: v for k, v in configs(capacity).items() if k in names}
+    for tname, trace in list(suite(trace_len, n_traces).items()):
+        out = {}
+        for cname, cfg in cfgs.items():
+            out[cname] = simulate(cfg, trace)
+        yield tname, trace, out
+
+
+def write_csv(fname: str, header: str, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, fname)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"wrote {path}")
+    return path
+
+
+def timed(fn, *args):
+    t0 = time.time()
+    out = fn(*args)
+    return out, time.time() - t0

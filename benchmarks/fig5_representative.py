@@ -1,0 +1,28 @@
+"""Paper Fig 5: six representative traces (large / modest / small gains)."""
+
+from __future__ import annotations
+
+from repro.cache import max_hit_ratio, simulate
+from repro.traces import representative_traces
+
+from .common import configs, write_csv
+
+
+def main(trace_len: int = 40_000):
+    cfgs = configs()
+    names = ["lru", "fifo", "amp-lru", "pg-lru", "mithril-lru",
+             "mithril-fifo", "mithril-amp"]
+    rows = []
+    for tname, trace in representative_traces(trace_len).items():
+        hr = {}
+        for n in names:
+            hr[n] = simulate(cfgs[n], trace).hit_ratio
+        rows.append([tname, f"{max_hit_ratio(trace):.4f}"] +
+                    [f"{hr[n]:.4f}" for n in names])
+        print(tname, {n: round(hr[n], 3) for n in names})
+    write_csv("fig5_representative.csv", "trace,max_hr," + ",".join(names),
+              rows)
+
+
+if __name__ == "__main__":
+    main()

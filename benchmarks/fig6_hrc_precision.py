@@ -1,0 +1,35 @@
+"""Paper Fig 6: hit-ratio curve + prefetch precision across cache sizes."""
+
+from __future__ import annotations
+
+from repro.cache import simulate
+from repro.cache.base import PF_MITHRIL, PF_PG
+from repro.traces import mixed
+
+from .common import configs, write_csv
+
+SIZES = (64, 128, 256, 512, 1024, 2048)
+
+
+def main(trace_len: int = 40_000):
+    trace = mixed(trace_len, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=94)
+    rows = []
+    for cap in SIZES:
+        cfgs = configs(cap)
+        lru = simulate(cfgs["lru"], trace)
+        pg = simulate(cfgs["pg-lru"], trace)
+        mith = simulate(cfgs["mithril-lru"], trace)
+        rows.append([cap, f"{lru.hit_ratio:.4f}", f"{pg.hit_ratio:.4f}",
+                     f"{mith.hit_ratio:.4f}",
+                     f"{pg.precision(PF_PG):.4f}",
+                     f"{mith.precision(PF_MITHRIL):.4f}"])
+        print(f"cap={cap}: lru={lru.hit_ratio:.3f} pg={pg.hit_ratio:.3f} "
+              f"mith={mith.hit_ratio:.3f} "
+              f"prec pg={pg.precision(PF_PG):.3f} "
+              f"mith={mith.precision(PF_MITHRIL):.3f}")
+    write_csv("fig6_hrc_precision.csv",
+              "capacity,hr_lru,hr_pg,hr_mithril,prec_pg,prec_mithril", rows)
+
+
+if __name__ == "__main__":
+    main()

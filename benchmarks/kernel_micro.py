@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks: oracle-vs-kernel agreement scale sweep + the
+VMEM/arithmetic accounting that justifies the BlockSpec choices.
+
+Wall-clock here is CPU interpret-mode (NOT TPU perf); the meaningful
+numbers are the footprint/arithmetic-intensity calculations used to pick
+block shapes (DESIGN.md §2), reported per kernel.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mining import pairwise_codes
+from repro.kernels import ops
+
+from .common import write_csv
+
+
+def mine_accounting(n, s, window, blk=128):
+    vmem = n * s * 4 + 2 * n * 4 + blk * window * 4
+    compares = n * window * s * 3
+    return vmem, compares
+
+
+def paged_accounting(hq, hd, ps, n_kv):
+    vmem = (hq * hd * 4 * 2) + 2 * ps * n_kv * hd * 4 + hq * ps * 4
+    flops = 4 * hq * ps * hd
+    return vmem, flops
+
+
+def main():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    for (n, s, window) in [(256, 8, 32), (1024, 8, 64), (4096, 8, 100)]:
+        cnt = rng.integers(2, s + 1, size=n).astype(np.int32)
+        base = np.sort(rng.integers(0, 50 * n, size=n)).astype(np.int32)
+        ts = np.zeros((n, s), np.int32)
+        for i in range(n):
+            c = int(cnt[i])
+            ts[i, :c] = np.sort(rng.integers(0, 40, size=c)) + base[i]
+        valid = jnp.ones((n,), bool)
+        args = (jnp.array(ts), jnp.array(cnt), valid)
+        out_k = ops.mithril_pairwise(*args, 60, window)
+        out_r = pairwise_codes(*args, 60, window)
+        ok = bool(jnp.all(out_k == out_r))
+        t0 = time.time()
+        for _ in range(3):
+            ops.mithril_pairwise(*args, 60, window).block_until_ready()
+        t_k = (time.time() - t0) / 3
+        vmem, comp = mine_accounting(n, s, window)
+        rows.append(["mithril_mine", f"n={n},w={window}", ok,
+                     f"{t_k*1e6:.0f}", vmem, comp])
+        print(f"mine n={n} w={window}: match={ok} vmem={vmem/1024:.0f}KB "
+              f"compares={comp/1e6:.1f}M interp={t_k*1e3:.1f}ms")
+
+    for (b, hq, hkv, hd, ps, npg) in [(4, 32, 8, 128, 16, 8),
+                                      (8, 16, 4, 64, 32, 16)]:
+        npt = npg * b + 1
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (b, hq, hd), jnp.float32)
+        kp = jax.random.normal(key, (npt, ps, hkv, hd), jnp.float32)
+        vp = jax.random.normal(key, (npt, ps, hkv, hd), jnp.float32)
+        ptab = jnp.array(rng.choice(npt, (b, npg), replace=False
+                                    ).astype(np.int32))
+        lens = jnp.full((b,), npg * ps, jnp.int32)
+        from repro.kernels import ref
+        got = ops.paged_decode(q, kp, vp, ptab, lens)
+        want = ref.paged_decode_ref(q, kp, vp, ptab, lens)
+        ok = bool(jnp.allclose(got, want, rtol=2e-4, atol=2e-4))
+        vmem, flops = paged_accounting(hq, hd, ps, hkv)
+        rows.append(["paged_decode", f"b={b},hq={hq},ps={ps}", ok, "-",
+                     vmem, flops])
+        print(f"paged b={b} hq={hq}: match={ok} vmem/step={vmem/1024:.0f}KB "
+              f"flops/page={flops/1e3:.0f}K")
+
+    write_csv("kernel_micro.csv",
+              "kernel,shape,matches_oracle,interp_us,vmem_bytes,arith", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Build the full §Roofline baseline table from saved dry-run artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--multi-pod]
+Writes results/roofline/*.json + results/roofline/table.md.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import traceback  # noqa: E402
+
+from repro.configs import all_cells                      # noqa: E402
+from repro.roofline import analyze_cell, save_roofline   # noqa: E402
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "roofline")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="fsdp")
+    a = ap.parse_args(argv)
+    mesh_name = "pod2x16x16" if a.multi_pod else "pod16x16"
+
+    rows = []
+    for arch, shape, on, why in all_cells():
+        if not on:
+            rows.append({"arch": arch, "shape": shape.name, "skip": why})
+            continue
+        path = os.path.join(
+            DRY, f"{arch}_{shape.name}_{mesh_name}_{a.strategy}.json")
+        try:
+            with open(path) as f:
+                dr = json.load(f)
+            rl = analyze_cell(arch, shape.name, multi_pod=a.multi_pod,
+                              strategy=a.strategy, dryrun_result=dr)
+            save_roofline(rl, OUT)
+            d = rl.to_dict()
+            rows.append(d)
+            print(f"{arch:18s} {shape.name:12s} comp={d['compute_s']:.3f}s "
+                  f"mem={d['memory_s']:.3f}s coll={d['collective_s']:.3f}s "
+                  f"-> {d['bottleneck']:10s} frac={d['roofline_fraction']:.3f}")
+        except Exception as e:
+            traceback.print_exc()
+            rows.append({"arch": arch, "shape": shape.name,
+                         "error": f"{type(e).__name__}: {e}"})
+
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"table_{mesh_name}.md"), "w") as f:
+        f.write("| arch | shape | compute_s | memory_s | collective_s | "
+                "bottleneck | MODEL_FLOPS | useful | roofline_frac |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            if "skip" in r:
+                f.write(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped: {r['skip']} | — | — | — |\n")
+            elif "error" in r:
+                f.write(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"ERROR {r['error']} | — | — | — |\n")
+            else:
+                f.write(
+                    f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                    f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                    f"{r['bottleneck']} | {r['model_flops']:.3g} | "
+                    f"{r['useful_ratio']:.2f} | "
+                    f"{r['roofline_fraction']:.3f} |\n")
+    with open(os.path.join(OUT, f"rows_{mesh_name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("table written")
+
+
+if __name__ == "__main__":
+    main()

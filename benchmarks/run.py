@@ -1,0 +1,64 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,seconds,derived`` CSV summary lines and writes detailed CSVs
+to results/bench/. (The multi-pod dry-run + roofline table have their own
+entry points: repro.launch.dryrun and benchmarks.roofline_table — they
+need the 512-device XLA flag set before jax import.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller trace suite (CI-speed)")
+    a = ap.parse_args(argv)
+    n_traces = 6 if a.quick else 16
+    tlen = 20_000 if a.quick else 40_000
+
+    from . import (expert_prefetch, fig34_trace_sweep, fig5_representative,
+                   fig6_hrc_precision, fig7_params, fig8_latency,
+                   fig9_midfreq, kernel_micro, table1_hit_ratio,
+                   tiered_serving)
+
+    jobs = [
+        ("table1_hit_ratio",
+         lambda: table1_hit_ratio.main(n_traces, tlen)),
+        ("fig34_trace_sweep",
+         lambda: fig34_trace_sweep.main(n_traces, tlen)),
+        ("fig5_representative",
+         lambda: fig5_representative.main(tlen)),
+        ("fig6_hrc_precision",
+         lambda: fig6_hrc_precision.main(tlen)),
+        ("fig7_params", lambda: fig7_params.main(min(tlen, 30_000))),
+        ("fig8_latency", lambda: fig8_latency.main(tlen)),
+        ("fig9_midfreq", lambda: fig9_midfreq.main(tlen)),
+        ("tiered_serving", tiered_serving.main),
+        ("expert_prefetch", expert_prefetch.main),
+        ("kernel_micro", kernel_micro.main),
+    ]
+
+    print("name,seconds,derived")
+    failures = 0
+    for name, fn in jobs:
+        t0 = time.time()
+        try:
+            derived = fn()
+            print(f"{name},{time.time()-t0:.1f},{derived if derived else ''}")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},{time.time()-t0:.1f},FAILED:{type(e).__name__}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

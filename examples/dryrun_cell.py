@@ -1,0 +1,29 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Production dry-run example: lower + compile one (arch x shape) cell on
+the 256-chip mesh and print its roofline decomposition.
+
+    PYTHONPATH=src python examples/dryrun_cell.py [arch] [shape]
+"""
+
+import sys  # noqa: E402
+
+from repro.launch.dryrun import run_cell           # noqa: E402
+from repro.roofline import analyze_cell            # noqa: E402
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-3b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+
+r = run_cell(arch, shape, multi_pod=False, strategy="fsdp", save=False)
+print(f"{arch} x {shape}: compiled for {r['n_devices']} devices in "
+      f"{r['compile_s']}s")
+print(f"  HLO flops (body-once): {r['flops_hlo_once']:.3g}  "
+      f"collectives: { {k: f'{v/1e9:.2f}GB' for k, v in r['collective_bytes_once'].items() if v} }")
+
+rl = analyze_cell(arch, shape, dryrun_result=r)
+print(f"  roofline: compute {rl.compute_s:.3f}s | memory {rl.memory_s:.3f}s "
+      f"| collective {rl.collective_s:.3f}s -> {rl.bottleneck}-bound")
+print(f"  MODEL_FLOPS {rl.model_flops:.3g}, useful-compute ratio "
+      f"{rl.useful_ratio:.2f}, roofline fraction {rl.roofline_fraction:.3f}")

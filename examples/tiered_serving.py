@@ -1,0 +1,41 @@
+"""Serving example: multi-tenant paged-KV decode with MITHRIL page
+prefetching between host memory and HBM, attention via the Pallas
+paged flash-decode kernel.
+
+    PYTHONPATH=src python examples/tiered_serving.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.cache.tiered import TieredKVCache
+from repro.core import MithrilConfig
+
+rng = np.random.default_rng(0)
+
+MCFG = MithrilConfig(min_support=2, max_support=8, lookahead=40,
+                     rec_buckets=512, rec_ways=4, mine_rows=32,
+                     pf_buckets=512, pf_ways=4, prefetch_list=3)
+
+# 16 tenants, each with 6 KV pages; HBM holds only 48 page slots
+tenants = [rng.choice(400, 6, replace=False) for _ in range(16)]
+kw = dict(n_host_pages=400, n_hbm_slots=48, page_size=16, n_kv=4,
+          head_dim=64)
+plain = TieredKVCache(**kw)
+smart = TieredKVCache(**kw, mithril_cfg=MCFG)
+
+for rnd in range(30):                      # decode rounds, random schedule
+    for t in rng.permutation(16):
+        q = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+        for tc in (plain, smart):
+            out = tc.attend(q, tenants[t], length=6 * 16)
+        assert out.shape == (16, 64)
+
+for name, tc in (("LRU tier only   ", plain), ("MITHRIL prefetch", smart)):
+    s = tc.stats
+    print(f"{name}: page hit {s.hit_ratio:.3f}  "
+          f"demand fetches {s.demand_fetches:5d}  "
+          f"prefetch precision {s.precision:.3f}  "
+          f"moved {s.bytes_moved/1e6:.0f}MB")
+stall = 1 - smart.stats.demand_fetches / max(1, plain.stats.demand_fetches)
+print(f"decode-stall (demand fetch) reduction: {stall:.1%}")

@@ -1,0 +1,111 @@
+"""AMP — Adaptive Multi-stream Prefetching (Gill & Bathen, FAST'07).
+
+Functional JAX re-implementation at the fidelity needed for the paper's
+comparison: per-stream sequential detection with an adaptive prefetch
+degree ``p`` and trigger distance ~p/2. Degree adapts up when prefetched
+blocks are consumed ("waited on" in the paper's timing model collapses to
+consumption in a trace-driven simulator) and down when prefetched blocks
+are evicted unused. Simplifications are recorded in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.hashindex import EMPTY
+
+
+@dataclasses.dataclass(frozen=True)
+class AmpConfig:
+    n_streams: int = 32
+    init_degree: int = 4
+    max_degree: int = 8     # also the width of the per-step prefetch vector
+    min_run: int = 2        # sequential run length before prefetching starts
+
+
+class AmpState(NamedTuple):
+    last: jax.Array      # (NS,) last block seen per stream
+    seqlen: jax.Array    # (NS,) current sequential run length
+    frontier: jax.Array  # (NS,) highest block prefetched for the stream
+    deg: jax.Array       # (NS,) adaptive prefetch degree
+    age: jax.Array       # (NS,) recency for stream-slot replacement
+    clock: jax.Array     # ()
+
+
+def init_amp(cfg: AmpConfig) -> AmpState:
+    ns = cfg.n_streams
+    i32 = jnp.int32
+    return AmpState(
+        last=jnp.full((ns,), EMPTY, i32), seqlen=jnp.zeros((ns,), i32),
+        frontier=jnp.full((ns,), EMPTY, i32),
+        deg=jnp.full((ns,), cfg.init_degree, i32),
+        age=jnp.zeros((ns,), i32), clock=jnp.zeros((), i32))
+
+
+def amp_access(cfg: AmpConfig, st: AmpState,
+               block: jax.Array) -> Tuple[AmpState, jax.Array]:
+    """Advance AMP on a demand access; returns (state, (max_degree,) blocks)."""
+    st = st._replace(clock=st.clock + 1)
+    match = st.last == block - 1
+    found = jnp.any(match)
+    s = jnp.argmax(match).astype(jnp.int32)
+
+    def cont(st: AmpState):
+        run = st.seqlen[s] + 1
+        deg = st.deg[s]
+        near_frontier = block + jnp.maximum(deg // 2, 1) >= st.frontier[s]
+        want = (run >= cfg.min_run) & near_frontier
+        start = jnp.maximum(st.frontier[s], block) + 1
+        end = block + deg
+        offs = jnp.arange(cfg.max_degree, dtype=jnp.int32)
+        vec = jnp.where(want & (start + offs <= end), start + offs, EMPTY)
+        st = st._replace(
+            last=st.last.at[s].set(block),
+            seqlen=st.seqlen.at[s].set(run),
+            frontier=st.frontier.at[s].set(
+                jnp.where(want, jnp.maximum(st.frontier[s], end),
+                          st.frontier[s])),
+            age=st.age.at[s].set(st.clock))
+        return st, vec
+
+    def fresh(st: AmpState):
+        v = jnp.argmin(st.age).astype(jnp.int32)
+        st = st._replace(
+            last=st.last.at[v].set(block),
+            seqlen=st.seqlen.at[v].set(1),
+            frontier=st.frontier.at[v].set(block),
+            deg=st.deg.at[v].set(cfg.init_degree),
+            age=st.age.at[v].set(st.clock))
+        return st, jnp.full((cfg.max_degree,), EMPTY, jnp.int32)
+
+    return lax.cond(found, cont, fresh, st)
+
+
+def _owning_stream(st: AmpState, block: jax.Array):
+    """Stream whose prefetch range plausibly produced ``block``."""
+    lo = st.frontier - 2 * jnp.maximum(st.deg, 1)
+    own = (block <= st.frontier) & (block >= lo) & (st.last != EMPTY)
+    return jnp.any(own), jnp.argmax(own).astype(jnp.int32)
+
+
+def amp_feedback_used(cfg: AmpConfig, st: AmpState,
+                      block: jax.Array, used: jax.Array) -> AmpState:
+    """A prefetched block was consumed -> grow that stream's degree."""
+    found, s = _owning_stream(st, block)
+    inc = used & found
+    return st._replace(deg=st.deg.at[s].set(
+        jnp.where(inc, jnp.minimum(st.deg[s] + 1, cfg.max_degree), st.deg[s])))
+
+
+def amp_feedback_evicted(cfg: AmpConfig, st: AmpState,
+                         block: jax.Array, evicted_unused: jax.Array) -> AmpState:
+    """A prefetched block died unused -> shrink that stream's degree."""
+    found, s = _owning_stream(st, block)
+    dec = evicted_unused & found
+    return st._replace(deg=st.deg.at[s].set(
+        jnp.where(dec, jnp.maximum(st.deg[s] - 1, 1), st.deg[s])))

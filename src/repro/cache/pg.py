@@ -1,0 +1,119 @@
+"""PROBABILITY GRAPH (Griffioen & Appleton, USENIX Summer'94) prefetcher.
+
+Directed graph over blocks: an edge h->x is reinforced whenever x follows
+h within a short lookahead window. Prefetch the successors of the current
+block whose conditional probability cnt(h->x)/occ(h) exceeds a minimum
+chance. Bounded out-degree (LFU slot replacement) keeps the "comprehensive
+conditional probability matrix" (paper Sec. 5.3) inside a fixed metadata
+budget, which is exactly how the paper sizes PG against cache size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.hashindex import EMPTY, choose_victim, probe
+
+
+@dataclasses.dataclass(frozen=True)
+class PgConfig:
+    window: int = 3          # lookahead period (edges added from last W blocks)
+    buckets: int = 4096
+    ways: int = 4
+    out_degree: int = 4      # neighbor slots per node (bounded out-degree)
+    min_chance_num: int = 1  # prefetch if cnt/occ >= num/den
+    min_chance_den: int = 4
+    max_prefetch: int = 2    # candidates returned per access
+
+
+class PgState(NamedTuple):
+    hist: jax.Array   # (W,) recent blocks ring
+    key: jax.Array    # (GB, GW) node id
+    nbr: jax.Array    # (GB, GW, K) successor ids
+    cnt: jax.Array    # (GB, GW, K) edge counts
+    occ: jax.Array    # (GB, GW) node occurrence count
+    age: jax.Array    # (GB, GW)
+    clock: jax.Array  # ()
+
+
+def init_pg(cfg: PgConfig) -> PgState:
+    gb, gw, k = cfg.buckets, cfg.ways, cfg.out_degree
+    i32 = jnp.int32
+    return PgState(
+        hist=jnp.full((cfg.window,), EMPTY, i32),
+        key=jnp.full((gb, gw), EMPTY, i32),
+        nbr=jnp.full((gb, gw, k), EMPTY, i32),
+        cnt=jnp.zeros((gb, gw, k), i32),
+        occ=jnp.zeros((gb, gw), i32),
+        age=jnp.zeros((gb, gw), i32),
+        clock=jnp.zeros((), i32))
+
+
+def _upsert_node(cfg: PgConfig, st: PgState, node: jax.Array):
+    """Find or create the row for ``node``; returns (state, bucket, way)."""
+    b, way, found = probe(st.key, node, cfg.buckets)
+
+    def create(s: PgState):
+        v = choose_victim(s.key[b], s.age[b])
+        s = s._replace(
+            key=s.key.at[b, v].set(node),
+            nbr=s.nbr.at[b, v].set(jnp.full((cfg.out_degree,), EMPTY, jnp.int32)),
+            cnt=s.cnt.at[b, v].set(jnp.zeros((cfg.out_degree,), jnp.int32)),
+            occ=s.occ.at[b, v].set(0),
+            age=s.age.at[b, v].set(s.clock))
+        return s, v
+
+    st, way = lax.cond(found, lambda s: (s, way), create, st)
+    return st, b, way
+
+
+def _add_edge(cfg: PgConfig, st: PgState, src: jax.Array,
+              dst: jax.Array) -> PgState:
+    def upd(s: PgState) -> PgState:
+        s, b, w = _upsert_node(cfg, s, src)
+        slots = s.nbr[b, w]
+        hit = slots == dst
+        have = jnp.any(hit)
+        k_hit = jnp.argmax(hit).astype(jnp.int32)
+        k_new = jnp.argmin(s.cnt[b, w]).astype(jnp.int32)  # LFU replacement
+        k = jnp.where(have, k_hit, k_new)
+        return s._replace(
+            nbr=s.nbr.at[b, w, k].set(dst),
+            cnt=s.cnt.at[b, w, k].set(jnp.where(have, s.cnt[b, w, k] + 1, 1)))
+
+    return lax.cond((src != EMPTY) & (src != dst), upd, lambda s: s, st)
+
+
+def pg_access(cfg: PgConfig, st: PgState,
+              block: jax.Array) -> Tuple[PgState, jax.Array]:
+    """Update graph with ``block`` and return (state, (max_prefetch,) cands)."""
+    st = st._replace(clock=st.clock + 1)
+    # reinforce edges from the last `window` blocks to this one
+    for i in range(cfg.window):
+        st = _add_edge(cfg, st, st.hist[i], block)
+    # bump occurrence count for this block's node
+    st, b, w = _upsert_node(cfg, st, block)
+    st = st._replace(occ=st.occ.at[b, w].add(1),
+                     age=st.age.at[b, w].set(st.clock))
+
+    # candidates: successors with cnt/occ >= min_chance, top-by-count
+    counts, nbrs = st.cnt[b, w], st.nbr[b, w]
+    occ = jnp.maximum(st.occ[b, w], 1)
+    qual = (nbrs != EMPTY) & (counts * cfg.min_chance_den >= occ * cfg.min_chance_num)
+    score = jnp.where(qual, counts, -1)
+    cands = []
+    for _ in range(cfg.max_prefetch):
+        k = jnp.argmax(score)
+        ok = score[k] > 0
+        cands.append(jnp.where(ok, nbrs[k], EMPTY))
+        score = score.at[k].set(-1)
+    out = jnp.stack(cands)
+
+    # slide history ring
+    hist = jnp.concatenate([st.hist[1:], block[None]])
+    return st._replace(hist=hist), out

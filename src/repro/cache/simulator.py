@@ -1,0 +1,191 @@
+"""Trace-driven cache+prefetch simulator (lax.scan over the request stream).
+
+Composable the way the paper composes layers (Fig. 1): a replacement
+policy (LRU/FIFO) underneath, any subset of {MITHRIL, AMP, PG} prefetching
+on top — MITHRIL-AMP etc. fall out of the composition. One compiled scan
+step per configuration; statistics match the paper's metrics:
+
+  hit ratio            = hits / requests
+  prefetch precision   = used prefetches / issued prefetches (per source)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import MithrilConfig, mithril
+from repro.core.hashindex import EMPTY
+from . import base
+from .amp import AmpConfig, amp_access, amp_feedback_evicted, amp_feedback_used, init_amp
+from .base import PF_AMP, PF_MITHRIL, PF_NONE, PF_PG, N_PF_SRC
+from .pg import PgConfig, init_pg, pg_access
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    capacity: int = 4096          # cache capacity in blocks
+    ways: int = 16
+    policy: str = "lru"           # lru | fifo
+    use_mithril: bool = False
+    use_amp: bool = False
+    use_pg: bool = False
+    mithril: MithrilConfig = dataclasses.field(default_factory=MithrilConfig)
+    amp: AmpConfig = dataclasses.field(default_factory=AmpConfig)
+    pg: PgConfig = dataclasses.field(default_factory=PgConfig)
+
+    def label(self) -> str:
+        pre = "+".join(n for n, u in [("mithril", self.use_mithril),
+                                      ("amp", self.use_amp),
+                                      ("pg", self.use_pg)] if u)
+        return f"{pre + '-' if pre else ''}{self.policy}"
+
+
+class Stats(NamedTuple):
+    requests: jax.Array           # ()
+    hits: jax.Array               # ()
+    pf_issued: jax.Array          # (N_PF_SRC,)
+    pf_used: jax.Array            # (N_PF_SRC,)
+    pf_evicted_unused: jax.Array  # (N_PF_SRC,)
+
+
+def init_stats() -> Stats:
+    z = jnp.zeros((), jnp.int32)
+    zv = jnp.zeros((N_PF_SRC,), jnp.int32)
+    return Stats(z, z, zv, zv.copy(), zv.copy())
+
+
+class SimResult(NamedTuple):
+    stats: Stats
+    hit_curve: np.ndarray   # per-request hit boolean
+
+    @property
+    def hit_ratio(self) -> float:
+        return float(self.stats.hits) / max(1, int(self.stats.requests))
+
+    def precision(self, src: int) -> float:
+        issued = int(self.stats.pf_issued[src])
+        return float(self.stats.pf_used[src]) / issued if issued else float("nan")
+
+
+def _apply_prefetches(cfg, cache, stats, cands, src):
+    """Insert a fixed-length candidate vector; collect eviction feedback."""
+    ev_blocks, ev_unused, ev_srcs = [], [], []
+    for i in range(cands.shape[0]):
+        cache, issued, ev = base.insert_prefetch(
+            cache, cands[i], jnp.int32(src), jnp.array(True))
+        stats = stats._replace(
+            pf_issued=stats.pf_issued.at[src].add(issued.astype(jnp.int32)),
+            pf_evicted_unused=stats.pf_evicted_unused.at[ev.pf_src].add(
+                ev.unused_pf.astype(jnp.int32)))
+        ev_blocks.append(ev.block)
+        ev_unused.append(ev.unused_pf)
+        ev_srcs.append(ev.pf_src)
+    return cache, stats, (jnp.stack(ev_blocks), jnp.stack(ev_unused),
+                          jnp.stack(ev_srcs))
+
+
+def build_step(cfg: SimConfig):
+    """Returns (init_carry, step) for lax.scan over a block trace."""
+
+    def init_carry():
+        carry = {
+            "cache": base.init_cache(cfg.capacity, cfg.ways),
+            "stats": init_stats(),
+        }
+        if cfg.use_mithril:
+            carry["mith"] = mithril.init(cfg.mithril)
+        if cfg.use_amp:
+            carry["amp"] = init_amp(cfg.amp)
+        if cfg.use_pg:
+            carry["pg"] = init_pg(cfg.pg)
+        return carry
+
+    rec_on = cfg.mithril.record_on
+
+    def step(carry, block):
+        cache, stats = carry["cache"], carry["stats"]
+        stats = stats._replace(requests=stats.requests + 1)
+
+        # 1. demand access
+        cache, hit, used_src, ev = base.access(cache, block, cfg.policy)
+        stats = stats._replace(
+            hits=stats.hits + hit.astype(jnp.int32),
+            pf_used=stats.pf_used.at[used_src].add(
+                (used_src != PF_NONE).astype(jnp.int32)),
+            pf_evicted_unused=stats.pf_evicted_unused.at[ev.pf_src].add(
+                ev.unused_pf.astype(jnp.int32)))
+
+        out = dict(carry)
+
+        # 2. MITHRIL: record per policy, then prefetch-list check (Alg. 3)
+        if cfg.use_mithril:
+            mith = carry["mith"]
+            if rec_on in ("miss", "miss+evict"):
+                mith = lax.cond(~hit,
+                                functools.partial(mithril.record, cfg.mithril,
+                                                  block=block),
+                                lambda s: s, mith)
+            if rec_on in ("evict", "miss+evict"):
+                mith = lax.cond(ev.block != EMPTY,
+                                functools.partial(mithril.record, cfg.mithril,
+                                                  block=ev.block),
+                                lambda s: s, mith)
+            if rec_on == "all":
+                mith = mithril.record(cfg.mithril, mith, block)
+            cands = mithril.lookup(cfg.mithril, mith, block)
+            cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
+                                                PF_MITHRIL)
+            out["mith"] = mith
+
+        # 3. AMP sequential prefetching + degree feedback
+        if cfg.use_amp:
+            amp = carry["amp"]
+            amp = amp_feedback_used(cfg.amp, amp, block, used_src == PF_AMP)
+            amp, vec = amp_access(cfg.amp, amp, block)
+            cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec, PF_AMP)
+            evb, evu, evsrc = evs
+            for i in range(evb.shape[0]):
+                amp = amp_feedback_evicted(cfg.amp, amp, evb[i],
+                                           evu[i] & (evsrc[i] == PF_AMP))
+            amp = amp_feedback_evicted(cfg.amp, amp, ev.block,
+                                       ev.unused_pf & (ev.pf_src == PF_AMP))
+            out["amp"] = amp
+
+        # 4. probability graph
+        if cfg.use_pg:
+            pg = carry["pg"]
+            pg, cands = pg_access(cfg.pg, pg, block)
+            cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands, PF_PG)
+            out["pg"] = pg
+
+        out["cache"], out["stats"] = cache, stats
+        return out, hit
+
+    return init_carry, step
+
+
+def simulate(cfg: SimConfig, trace: np.ndarray,
+             unroll: int = 1) -> SimResult:
+    """Run ``trace`` (1-D int array of block ids) through the configuration."""
+    init_carry, step = build_step(cfg)
+
+    @jax.jit
+    def run(tr):
+        carry, hits = lax.scan(step, init_carry(), tr, unroll=unroll)
+        return carry["stats"], hits
+
+    stats, hits = run(jnp.asarray(trace, jnp.int32))
+    return SimResult(jax.device_get(stats), np.asarray(hits))
+
+
+def max_hit_ratio(trace: np.ndarray) -> float:
+    """1 - cold-miss ratio: the paper's 'maximum obtainable hit ratio'."""
+    n_unique = len(np.unique(trace))
+    return 1.0 - n_unique / max(1, len(trace))

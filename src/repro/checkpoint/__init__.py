@@ -1,0 +1,4 @@
+from .ckpt import CheckpointManager
+from .elastic import plan_remesh, reshard_state
+
+__all__ = ["CheckpointManager", "plan_remesh", "reshard_state"]

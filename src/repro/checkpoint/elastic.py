@@ -1,0 +1,42 @@
+"""Elastic re-scaling: resume a checkpoint on a DIFFERENT mesh.
+
+Checkpoints store full logical arrays (per-shard layouts are a host-count
+concern; the manifest records the source mesh for audit). Re-scaling is
+therefore: recompute the auto-sharding rules for the surviving mesh and
+device_put — the divisibility-aware rules (dist/sharding.py) adapt to any
+axis sizes, so scale-down to any divisor mesh (or scale-up) "just works".
+``plan_remesh`` validates the target before committing.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.dist import sharding as shd
+
+
+def plan_remesh(params_abs, old_mesh_shape: Tuple[int, ...],
+                new_mesh) -> dict:
+    """Feasibility report for resuming on ``new_mesh``."""
+    specs = shd.param_specs(params_abs, new_mesh)
+    n_sharded = sum(1 for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: hasattr(x, "__iter__") or True)
+        if any(a is not None for a in (s or ())))
+    total = len(jax.tree.leaves(params_abs))
+    return {
+        "old_mesh": list(old_mesh_shape),
+        "new_mesh": list(new_mesh.devices.shape),
+        "n_devices": int(np.prod(new_mesh.devices.shape)),
+        "leaves": total,
+        "leaves_sharded": n_sharded,
+    }
+
+
+def reshard_state(state, new_mesh, strategy: str = "fsdp"):
+    """NamedSharding pytree for ``state`` on ``new_mesh`` (params-shaped
+    subtrees use the param rules; everything else replicates)."""
+    specs = shd.param_specs(state, new_mesh, strategy)
+    return shd.to_named(specs, new_mesh)

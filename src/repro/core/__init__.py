@@ -1,0 +1,20 @@
+"""MITHRIL core: sporadic-association mining for cache prefetching (paper Sec. 4).
+
+The paper's primary contribution as a composable, jit-safe JAX module:
+fixed-shape recording/mining/prefetching tables, the mining procedure
+(dense vectorized + sequential oracle), and the Alg. 3 access API.
+"""
+
+from .config import MithrilConfig
+from .state import MithrilState, init_state
+from .mithril import access, add_association, init, lookup, mine, record
+from .mining import (associations_dense, mine_reference_sequential,
+                     pairwise_codes, select_pairs, sort_by_first_ts)
+from .hashindex import EMPTY
+
+__all__ = [
+    "MithrilConfig", "MithrilState", "init_state", "init",
+    "access", "add_association", "lookup", "mine", "record",
+    "associations_dense", "mine_reference_sequential", "pairwise_codes",
+    "select_pairs", "sort_by_first_ts", "EMPTY",
+]

@@ -1,0 +1,55 @@
+"""Fixed-capacity set-associative hash tables for jit-compiled JAX.
+
+The paper keeps hashmaps from block address to table rows. Under jit we
+need fixed shapes and O(1) vectorizable probes, so every map here is a
+W-way set-associative array: ``bucket = mix(key) & (n_buckets - 1)``,
+then a W-wide compare. Replacement within a bucket is FIFO by insertion
+age, matching the paper's "replace the oldest entry" rule for the
+recording table and the FIFO shard replacement of the prefetching table.
+
+Keys are int32 block ids; EMPTY = -1. All functions are pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+def mix32(key: jax.Array) -> jax.Array:
+    """Murmur3-style finalizer on int32 (bijective, cheap on VPU)."""
+    k = key.astype(jnp.uint32)
+    k = k ^ (k >> 16)
+    k = k * jnp.uint32(0x7FEB352D)
+    k = k ^ (k >> 15)
+    k = k * jnp.uint32(0x846CA68B)
+    k = k ^ (k >> 16)
+    return k.astype(jnp.int32)
+
+
+def bucket_of(key: jax.Array, n_buckets: int) -> jax.Array:
+    return jnp.bitwise_and(mix32(key), jnp.int32(n_buckets - 1))
+
+
+def probe(keys: jax.Array, key: jax.Array, n_buckets: int):
+    """Find ``key`` in ``keys[n_buckets, ways]``.
+
+    Returns (bucket, way, found) with way = index of the hit (or 0).
+    """
+    b = bucket_of(key, n_buckets)
+    row = keys[b]
+    hit = row == key
+    found = jnp.any(hit)
+    way = jnp.argmax(hit).astype(jnp.int32)
+    return b, way, found
+
+
+def choose_victim(keys_row: jax.Array, age_row: jax.Array) -> jax.Array:
+    """Way to overwrite: first empty way, else the FIFO-oldest way."""
+    empty = keys_row == EMPTY
+    any_empty = jnp.any(empty)
+    first_empty = jnp.argmax(empty).astype(jnp.int32)
+    oldest = jnp.argmin(age_row).astype(jnp.int32)
+    return jnp.where(any_empty, first_empty, oldest)

@@ -1,0 +1,199 @@
+"""MITHRIL prefetching layer — functional JAX implementation (paper Alg. 3).
+
+Public API (all pure, jit/scan-safe):
+
+    state = init(cfg)
+    state = record(cfg, state, block)            # rFlag path; auto-mines when full
+    cand  = lookup(cfg, state, block)            # pFlag path; (P,) block ids or EMPTY
+    state, cand = access(cfg, state, block, do_record, do_lookup)
+    state = mine(cfg, state)                     # usually triggered by record()
+
+The recording table is set-associative with in-bucket storage; migration to
+the mining table happens when a block accumulates ``min_support`` timestamps;
+a full mining table triggers ``mine`` which writes discovered associations
+into the prefetching table (Sec. 4.2). ``pairwise_fn`` lets the Pallas
+kernel replace the dense association check.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import MithrilConfig
+from .hashindex import EMPTY, choose_victim, probe
+from .mining import associations_dense, pairwise_codes
+from .state import MithrilState, init_state
+
+init = init_state
+
+
+# ---------------------------------------------------------------------------
+# Prefetching table
+# ---------------------------------------------------------------------------
+
+def lookup(cfg: MithrilConfig, state: MithrilState, block: jax.Array) -> jax.Array:
+    """Return up to P prefetch candidates for ``block`` (EMPTY-padded)."""
+    b, way, found = probe(state.pf_key, block, cfg.pf_buckets)
+    vals = state.pf_vals[b, way]
+    return jnp.where(found, vals, jnp.full((cfg.prefetch_list,), EMPTY, jnp.int32))
+
+
+def add_association(cfg: MithrilConfig, state: MithrilState,
+                    src: jax.Array, dst: jax.Array,
+                    valid: jax.Array) -> MithrilState:
+    """Insert association src -> dst (FIFO within the P-slot list)."""
+
+    def do_add(st: MithrilState) -> MithrilState:
+        b, way, found = probe(st.pf_key, src, cfg.pf_buckets)
+
+        def update_existing(s: MithrilState) -> MithrilState:
+            already = jnp.any(s.pf_vals[b, way] == dst)
+            pos = jnp.mod(s.pf_cnt[b, way], cfg.prefetch_list)
+            vals = s.pf_vals.at[b, way, pos].set(
+                jnp.where(already, s.pf_vals[b, way, pos], dst))
+            cnt = s.pf_cnt.at[b, way].add(jnp.where(already, 0, 1))
+            return s._replace(pf_vals=vals, pf_cnt=cnt,
+                              n_pairs=s.n_pairs + jnp.where(already, 0, 1))
+
+        def insert_new(s: MithrilState) -> MithrilState:
+            v = choose_victim(s.pf_key[b], s.pf_age[b])
+            fresh = jnp.full((cfg.prefetch_list,), EMPTY, jnp.int32).at[0].set(dst)
+            return s._replace(
+                pf_key=s.pf_key.at[b, v].set(src),
+                pf_vals=s.pf_vals.at[b, v].set(fresh),
+                pf_cnt=s.pf_cnt.at[b, v].set(1),
+                pf_age=s.pf_age.at[b, v].set(s.ts),
+                n_pairs=s.n_pairs + 1,
+            )
+
+        return lax.cond(found, update_existing, insert_new, st)
+
+    return lax.cond(valid, do_add, lambda st: st, state)
+
+
+# ---------------------------------------------------------------------------
+# Mining
+# ---------------------------------------------------------------------------
+
+def mine(cfg: MithrilConfig, state: MithrilState,
+         pairwise_fn: Optional[Callable] = None) -> MithrilState:
+    """Run the mining procedure and fold associations into the prefetch table."""
+    fn = pairwise_fn or pairwise_codes
+    src, dst, valid, dropped = associations_dense(
+        state.mine_block, state.mine_ts, state.mine_cnt,
+        cfg.min_support, cfg.max_support, cfg.lookahead,
+        cfg.window, cfg.pairs_cap, pairwise_fn=fn)
+
+    def body(st: MithrilState, xs):
+        s, d, v = xs
+        st = add_association(cfg, st, s, d, v)
+        if cfg.symmetric:  # beyond-paper: bidirectional edges (DESIGN.md)
+            st = add_association(cfg, st, d, s, v)
+        return st, None
+
+    state, _ = lax.scan(body, state, (src, dst, valid))
+
+    # clear the mining table and drop stale recording-index pointers into it
+    return state._replace(
+        rec_key=jnp.where(state.rec_loc == 1, EMPTY, state.rec_key),
+        rec_loc=jnp.zeros_like(state.rec_loc),
+        mine_block=jnp.full_like(state.mine_block, EMPTY),
+        mine_ts=jnp.zeros_like(state.mine_ts),
+        mine_cnt=jnp.zeros_like(state.mine_cnt),
+        mine_fill=jnp.zeros_like(state.mine_fill),
+        n_mines=state.n_mines + 1,
+        n_dropped=state.n_dropped + dropped,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Recording
+# ---------------------------------------------------------------------------
+
+def _migrate(cfg: MithrilConfig, st: MithrilState, block: jax.Array,
+             b: jax.Array, way: jax.Array, ts_row: jax.Array) -> MithrilState:
+    """Move a mining-ready row into the mining table (invariant: not full)."""
+    row = st.mine_fill
+    mine_ts = st.mine_ts.at[row, : cfg.min_support].set(ts_row)
+    return st._replace(
+        mine_block=st.mine_block.at[row].set(block),
+        mine_ts=mine_ts,
+        mine_cnt=st.mine_cnt.at[row].set(cfg.min_support),
+        mine_fill=row + 1,
+        rec_loc=st.rec_loc.at[b, way].set(1),
+        rec_row=st.rec_row.at[b, way].set(row),
+    )
+
+
+def _record_event(cfg: MithrilConfig, state: MithrilState,
+                  block: jax.Array) -> MithrilState:
+    ts = state.ts
+    b, way, found = probe(state.rec_key, block, cfg.rec_buckets)
+    in_mine = state.rec_loc[b, way] == 1
+
+    def case_new(st: MithrilState) -> MithrilState:
+        v = choose_victim(st.rec_key[b], st.rec_age[b])
+        fresh = jnp.zeros((cfg.min_support,), jnp.int32).at[0].set(ts)
+        st = st._replace(
+            rec_key=st.rec_key.at[b, v].set(block),
+            rec_ts=st.rec_ts.at[b, v].set(fresh),
+            rec_cnt=st.rec_cnt.at[b, v].set(1),
+            rec_age=st.rec_age.at[b, v].set(ts),
+            rec_loc=st.rec_loc.at[b, v].set(0),
+        )
+        if cfg.min_support == 1:  # mining-ready on first sight (static branch)
+            st = _migrate(cfg, st, block, b, v, st.rec_ts[b, v])
+        return st
+
+    def case_rec(st: MithrilState) -> MithrilState:
+        cnt = st.rec_cnt[b, way]            # invariant: cnt < R here
+        rec_ts = st.rec_ts.at[b, way, cnt].set(ts)
+        st = st._replace(rec_ts=rec_ts, rec_cnt=st.rec_cnt.at[b, way].add(1))
+        return lax.cond(
+            st.rec_cnt[b, way] >= cfg.min_support,
+            lambda s: _migrate(cfg, s, block, b, way, s.rec_ts[b, way]),
+            lambda s: s, st)
+
+    def case_mine(st: MithrilState) -> MithrilState:
+        row = st.rec_row[b, way]
+        mcnt = st.mine_cnt[row]
+        can = mcnt < cfg.max_support
+        pos = jnp.minimum(mcnt, cfg.max_support - 1)
+        mine_ts = st.mine_ts.at[row, pos].set(
+            jnp.where(can, ts, st.mine_ts[row, pos]))
+        # exceeding S marks the block frequent (excluded from mining)
+        mine_cnt = st.mine_cnt.at[row].set(
+            jnp.where(can, mcnt + 1, cfg.max_support + 1))
+        return st._replace(mine_ts=mine_ts, mine_cnt=mine_cnt)
+
+    branch = jnp.where(found, jnp.where(in_mine, 2, 1), 0)
+    state = lax.switch(branch, [case_new, case_rec, case_mine], state)
+    return state._replace(ts=ts + 1)
+
+
+def record(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
+           pairwise_fn: Optional[Callable] = None) -> MithrilState:
+    """Record one request (Alg. 3 rFlag path); mines when the table fills."""
+    state = _record_event(cfg, state, block)
+    return lax.cond(
+        state.mine_fill >= cfg.mine_rows,
+        functools.partial(mine, cfg, pairwise_fn=pairwise_fn),
+        lambda s: s, state)
+
+
+def access(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
+           do_record: jax.Array, do_lookup: jax.Array,
+           pairwise_fn: Optional[Callable] = None):
+    """Alg. 3: optional record (rFlag) + optional prefetch lookup (pFlag)."""
+    state = lax.cond(
+        do_record,
+        functools.partial(record, cfg, block=block, pairwise_fn=pairwise_fn),
+        lambda s: s, state)
+    cand = lookup(cfg, state, block)
+    empty = jnp.full_like(cand, EMPTY)
+    return state, jnp.where(do_lookup, cand, empty)

@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline with MITHRIL shard readahead.
+
+Design goals of a production input pipeline that matter here:
+* **restart-reproducible** — batch(step) is a pure function of (seed,
+  step), so checkpoint-restart resumes the exact stream;
+* **sharded placement** — batches are built per-host and assembled with
+  ``jax.make_array_from_callback`` against the batch sharding;
+* **readahead** — the shard-fetch stream (which "file" each step touches)
+  feeds a MITHRIL instance; predicted shards are staged ahead of use.
+  Shard access is mildly non-sequential (shuffled epochs re-visit shard
+  groups), which is precisely the sporadic-association regime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MithrilConfig, mithril
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 64          # virtual input files
+    shard_group: int = 4        # shards co-read per step window
+
+
+class SyntheticPipeline:
+    def __init__(self, cfg: DataConfig,
+                 mithril_cfg: Optional[MithrilConfig] = None):
+        self.cfg = cfg
+        self.staged: set = set()
+        self.readahead_hits = 0
+        self.readahead_misses = 0
+        self.mith_cfg = mithril_cfg
+        if mithril_cfg is not None:
+            self._mstate = mithril.init(mithril_cfg)
+            self._rec = jax.jit(lambda st, b: mithril.record(mithril_cfg, st, b))
+            self._look = jax.jit(lambda st, b: mithril.lookup(mithril_cfg, st, b))
+
+    # -- shard schedule -------------------------------------------------------
+
+    def shard_for_step(self, step: int) -> int:
+        c = self.cfg
+        epoch = step // c.n_shards
+        rng = np.random.default_rng(c.seed + epoch)
+        order = rng.permutation(c.n_shards)
+        # group locality: consecutive steps hit a small co-read group
+        g = (step % c.n_shards) // c.shard_group
+        within = step % c.shard_group
+        return int(order[(g * c.shard_group + within) % c.n_shards])
+
+    def _stage(self, shard: int):
+        self.staged.add(shard)
+
+    def fetch_shard(self, step: int) -> int:
+        shard = self.shard_for_step(step)
+        if shard in self.staged:
+            self.readahead_hits += 1
+        else:
+            self.readahead_misses += 1
+            self._stage(shard)
+            if self.mith_cfg is not None:
+                self._mstate = self._rec(self._mstate, jnp.int32(shard))
+                for c in np.asarray(self._look(self._mstate, jnp.int32(shard))):
+                    if c >= 0:
+                        self._stage(int(c))
+        # bound staging memory: keep most recent few groups
+        if len(self.staged) > 4 * self.cfg.shard_group:
+            self.staged = set(list(self.staged)[-4 * self.cfg.shard_group:])
+        return shard
+
+    # -- batches ---------------------------------------------------------------
+
+    def batch_np(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        shard = self.fetch_shard(step)
+        rng = np.random.default_rng((c.seed, shard, step))
+        tokens = rng.integers(0, c.vocab, (c.global_batch, c.seq_len),
+                              dtype=np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        labels[:, -1] = -1
+        return {"tokens": tokens, "labels": labels}
+
+    def batch_sharded(self, step: int, shardings) -> Dict[str, jax.Array]:
+        """Assemble the global batch directly onto device shards."""
+        host = self.batch_np(step)
+
+        def place(name):
+            arr = host[name]
+            sh = shardings[name]
+            return jax.make_array_from_callback(
+                arr.shape, sh, lambda idx: arr[idx])
+        return {k: place(k) for k in host}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_np(step)
+            step += 1

@@ -1,0 +1,68 @@
+"""Pallas kernel: batched set-associative prefetch-table probe.
+
+Per-request MITHRIL work is one hash probe (Alg. 3 pFlag path). When the
+serving layer batches requests (pages/experts for a whole decode step),
+the probes vectorize: mix32 the query block, gather the W-way bucket
+rows, compare, and emit the P prefetch candidates per query. The tables
+are small (<=256KB) and live fully in VMEM; queries are tiled by the grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix32(k):
+    k = k.astype(jnp.uint32)
+    k = k ^ (k >> 16)
+    k = k * jnp.uint32(0x7FEB352D)
+    k = k ^ (k >> 15)
+    k = k * jnp.uint32(0x846CA68B)
+    k = k ^ (k >> 16)
+    return k.astype(jnp.int32)
+
+
+def _lookup_kernel(q_ref, keys_ref, vals_ref, out_ref, *, blk: int,
+                   n_buckets: int, ways: int, plist: int):
+    i = pl.program_id(0)
+    q = q_ref[pl.ds(i * blk, blk), 0]                    # (BLK,)
+    bucket = jnp.bitwise_and(_mix32(q), jnp.int32(n_buckets - 1))
+    # gather the W candidate keys/values per query
+    rows_keys = keys_ref[...][bucket]                    # (BLK, W)
+    hit = rows_keys == q[:, None]                        # (BLK, W)
+    found = jnp.any(hit, axis=1)
+    way = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    rows_vals = vals_ref[...][bucket]                    # (BLK, W, P)
+    picked = jnp.take_along_axis(
+        rows_vals, way[:, None, None], axis=1)[:, 0]     # (BLK, P)
+    out_ref[...] = jnp.where(found[:, None], picked, jnp.int32(-1))
+
+
+def hash_lookup_kernel(queries: jax.Array, pf_key: jax.Array,
+                       pf_vals: jax.Array, *, blk: int = 256,
+                       interpret: bool = True) -> jax.Array:
+    """queries: (Q,) int32; pf_key: (NB, W); pf_vals: (NB, W, P).
+    Returns (Q, P) prefetch candidates (-1 = none)."""
+    q = queries.shape[0]
+    nb, ways = pf_key.shape
+    plist = pf_vals.shape[-1]
+    blk = min(blk, q)
+    assert q % blk == 0, (q, blk)
+    kernel = functools.partial(_lookup_kernel, blk=blk, n_buckets=nb,
+                               ways=ways, plist=plist)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // blk,),
+        in_specs=[
+            pl.BlockSpec((q, 1), lambda i: (0, 0)),
+            pl.BlockSpec(pf_key.shape, lambda i: (0, 0)),
+            pl.BlockSpec(pf_vals.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, plist), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, plist), jnp.int32),
+        interpret=interpret,
+    )(queries.reshape(-1, 1), pf_key, pf_vals)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the MITHRIL pairwise association check.
+
+The mining hot-spot is the (rows x window x S) timestamp comparison after
+the sort (core/mining.pairwise_codes). TPU-native design (DESIGN.md §2):
+
+* the whole (padded) timestamp matrix lives in VMEM — mining tables are
+  small by construction (paper: 1250 rows x S=8 -> ~40KB at int32), far
+  under the ~16MB VMEM budget;
+* the grid tiles ROWS; each program compares its (BLK, S) row tile
+  against ``window`` STATICALLY-SHIFTED row slabs, so the inner loop is
+  pure VPU elementwise compares over lanes — no gathers, no dynamic
+  control flow;
+* ``window`` is the paper's Delta-bounded inner-loop break, here a static
+  bound (first timestamps are unique, so at most Delta rows qualify).
+
+Input rows must be pre-padded with ``window`` trailing invalid rows
+(ops.py does this), keeping every shifted slice in range.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mine_kernel(ts_ref, cnt_ref, valid_ref, out_ref, *, delta: int,
+                 window: int, blk: int):
+    """Grid: (n_row_blocks,). ts_ref: full (N_pad, S); out: (BLK, W) tile."""
+    i = pl.program_id(0)
+    r0 = i * blk
+    ts_i = ts_ref[pl.ds(r0, blk), :]            # (BLK, S)
+    cnt_i = cnt_ref[pl.ds(r0, blk), :]          # (BLK, 1)
+    val_i = valid_ref[pl.ds(r0, blk), :]        # (BLK, 1)
+    s = ts_i.shape[1]
+    k_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, s), 1)
+    live_i = k_iota < cnt_i                      # aligned-pair mask
+
+    for b in range(window):
+        ts_j = ts_ref[pl.ds(r0 + 1 + b, blk), :]
+        cnt_j = cnt_ref[pl.ds(r0 + 1 + b, blk), :]
+        val_j = valid_ref[pl.ds(r0 + 1 + b, blk), :]
+        gap_ok = (ts_j[:, :1] - ts_i[:, :1]) <= delta
+        same_cnt = cnt_j == cnt_i
+        diffs = jnp.abs(ts_j - ts_i)
+        weak = jnp.all(jnp.where(live_i, diffs <= delta, True), axis=1,
+                       keepdims=True)
+        strong = weak & jnp.any(jnp.where(live_i, diffs == 1, False), axis=1,
+                                keepdims=True)
+        ok = (val_i == 1) & (val_j == 1) & gap_ok & same_cnt
+        code = jnp.where(ok & strong, 2, jnp.where(ok & weak, 1, 0))
+        out_ref[:, b] = code[:, 0].astype(jnp.int32)
+
+
+def pairwise_codes_kernel(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
+                          delta: int, window: int, *, blk: int = 128,
+                          interpret: bool = True) -> jax.Array:
+    """ts: (N_pad, S) int32 sorted by ts[:,0] and padded with >= window
+    invalid rows; cnt/valid: (N_pad, 1) int32. Returns (N, W) codes where
+    N = N_pad - window - 1 ... callers slice. See ops.mithril_pairwise.
+    """
+    n_pad, s = ts.shape
+    n_rows = n_pad - window - 1
+    assert n_rows % blk == 0, (n_rows, blk)
+    grid = (n_rows // blk,)
+    kernel = functools.partial(_mine_kernel, delta=delta, window=window,
+                               blk=blk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(ts.shape, lambda i: (0, 0)),      # whole table VMEM
+            pl.BlockSpec(cnt.shape, lambda i: (0, 0)),
+            pl.BlockSpec(valid.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, window), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, window), jnp.int32),
+        interpret=interpret,
+    )(ts, cnt, valid)

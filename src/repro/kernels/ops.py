@@ -1,0 +1,65 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU — DESIGN.md §2). The wrappers adapt the core data
+layouts (padding, 2-D scalar arrays) to the kernel contracts.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .hash_lookup import hash_lookup_kernel
+from .mithril_mine import pairwise_codes_kernel
+from .paged_decode import paged_decode_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "window", "blk"))
+def mithril_pairwise(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
+                     delta: int, window: int, blk: int = 128) -> jax.Array:
+    """Drop-in for core.mining.pairwise_codes ((N,S),(N,),(N,) -> (N,W)).
+
+    Pads rows so (a) shifted window slices stay in range and (b) the row
+    count tiles by ``blk``; padded rows are invalid and can never match.
+    """
+    n, s = ts.shape
+    blk = min(blk, max(8, 1 << (n - 1).bit_length()))
+    n_tiles = (n + blk - 1) // blk
+    n_rows = n_tiles * blk
+    pad_total = n_rows + window + 1
+    big = jnp.int32(2_000_000_000)
+    ts_p = jnp.full((pad_total, s), big, jnp.int32).at[:n].set(ts)
+    cnt_p = jnp.zeros((pad_total, 1), jnp.int32).at[:n, 0].set(cnt)
+    val_p = jnp.zeros((pad_total, 1), jnp.int32).at[:n, 0].set(
+        valid.astype(jnp.int32))
+    out = pairwise_codes_kernel(ts_p, cnt_p, val_p, delta, window, blk=blk,
+                                interpret=not _on_tpu())
+    return out[:n]
+
+
+@jax.jit
+def prefetch_lookup(queries: jax.Array, pf_key: jax.Array,
+                    pf_vals: jax.Array) -> jax.Array:
+    """Batched MITHRIL prefetch-table probe: (Q,) -> (Q, P) candidates."""
+    q = queries.shape[0]
+    blk = 256
+    qp = ((q + blk - 1) // blk) * blk
+    padded = jnp.full((qp,), -1, jnp.int32).at[:q].set(queries)
+    out = hash_lookup_kernel(padded, pf_key, pf_vals, blk=min(blk, qp),
+                             interpret=not _on_tpu())
+    return out[:q]
+
+
+@jax.jit
+def paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                 page_table: jax.Array, lengths: jax.Array) -> jax.Array:
+    """Flash-decode over paged KV: (B,Hq,hd) x pools -> (B,Hq,hd)."""
+    return paged_decode_kernel(q, k_pool, v_pool, page_table, lengths,
+                               interpret=not _on_tpu())

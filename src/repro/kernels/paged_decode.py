@@ -1,0 +1,117 @@
+"""Pallas TPU flash-decode kernel over a PAGED KV cache.
+
+This is the serving hot-path that MITHRIL feeds: the tiered cache manager
+(cache/tiered.py) keeps hot KV pages in HBM and prefetches predicted
+pages; this kernel consumes the page table that manager maintains.
+
+Design (TPU paged-attention shape):
+* grid = (batch, n_pages); the page loop is the minor grid dim so VMEM
+  scratch (running max / denominator / accumulator) carries across the
+  page steps of one batch row — the flash-decode recurrence;
+* page ids come from a page table; each step dynamically slices one
+  (page_size, Hkv, hd) page out of the pool (scalar-prefetch pattern on
+  real TPUs; interpret mode executes identical logic);
+* GQA via static per-kv-head slices of q — MXU dots of (G, hd)x(hd, ps);
+* fp32 softmax state, bf16 IO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(ptab_ref, len_ref, q_ref, kpool_ref, vpool_ref, out_ref,
+                   m_ref, l_ref, acc_ref, *, page_size: int, n_pages: int,
+                   n_kv: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (Hq, hd)
+    hq, hd = q.shape
+    g = hq // n_kv
+    scale = hd ** -0.5
+    page_id = ptab_ref[b, p]
+    length = len_ref[b, 0]
+
+    pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    valid = pos < length
+
+    scores = jnp.zeros((hq, page_size), jnp.float32)
+    for h in range(n_kv):
+        k_h = kpool_ref[page_id, :, h, :].astype(jnp.float32)   # (ps, hd)
+        q_h = q[h * g:(h + 1) * g].astype(jnp.float32)          # (G, hd)
+        s_h = jax.lax.dot_general(q_h, k_h, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        scores = jax.lax.dynamic_update_slice(scores, s_h * scale,
+                                              (h * g, 0))
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    pexp = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + pexp.sum(axis=1, keepdims=True)
+
+    pv = jnp.zeros((hq, hd), jnp.float32)
+    for h in range(n_kv):
+        v_h = vpool_ref[page_id, :, h, :].astype(jnp.float32)   # (ps, hd)
+        pv_h = jax.lax.dot_general(pexp[h * g:(h + 1) * g], v_h,
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        pv = jax.lax.dynamic_update_slice(pv, pv_h, (h * g, 0))
+    acc_new = acc_prev * corr + pv
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        out_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)
+                      ).astype(out_ref.dtype)
+
+
+def paged_decode_kernel(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, Hq, hd); pools: (NP, page_size, Hkv, hd); page_table:
+    (B, n_pages) int32 page ids; lengths: (B,) valid token counts.
+    Returns (B, Hq, hd)."""
+    b, hq, hd = q.shape
+    npages_total, page_size, n_kv, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    kernel = functools.partial(_decode_kernel, page_size=page_size,
+                               n_pages=n_pages, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec(page_table.shape, lambda b_, p: (0, 0)),
+            pl.BlockSpec((lengths.shape[0], 1), lambda b_, p: (0, 0)),
+            pl.BlockSpec((1, hq, hd), lambda b_, p: (b_, 0, 0)),
+            pl.BlockSpec(k_pool.shape, lambda b_, p: (0, 0, 0, 0)),
+            pl.BlockSpec(v_pool.shape, lambda b_, p: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, hd), lambda b_, p: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, lengths.reshape(-1, 1), q, k_pool, v_pool)

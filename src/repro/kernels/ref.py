@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashindex import bucket_of
+from repro.core.mining import pairwise_codes
+
+
+def mithril_pairwise_ref(ts, cnt, valid, delta: int, window: int):
+    """Same contract as core.mining.pairwise_codes ((N,S),(N,),(N,))."""
+    return pairwise_codes(ts, cnt, valid, delta, window)
+
+
+def hash_lookup_ref(queries, pf_key, pf_vals):
+    nb = pf_key.shape[0]
+
+    def one(q):
+        b = bucket_of(q, nb)
+        hit = pf_key[b] == q
+        found = jnp.any(hit)
+        way = jnp.argmax(hit)
+        return jnp.where(found, pf_vals[b, way],
+                         jnp.full((pf_vals.shape[-1],), -1, jnp.int32))
+
+    return jax.vmap(one)(queries)
+
+
+def paged_decode_ref(q, k_pool, v_pool, page_table, lengths):
+    """q: (B,Hq,hd); pools: (NP,ps,Hkv,hd); page_table: (B,NPg); lengths (B,)."""
+    b, hq, hd = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    npg = page_table.shape[1]
+    g = hq // hkv
+
+    k = k_pool[page_table].reshape(b, npg * ps, hkv, hd)
+    v = v_pool[page_table].reshape(b, npg * ps, hkv, hd)
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    pos = jnp.arange(npg * ps)[None]
+    s = jnp.where((pos < lengths[:, None])[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, hd).astype(q.dtype)

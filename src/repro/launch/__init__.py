@@ -1,0 +1,3 @@
+from .mesh import dp_axes_of, make_production_mesh, make_smoke_mesh
+
+__all__ = ["dp_axes_of", "make_production_mesh", "make_smoke_mesh"]

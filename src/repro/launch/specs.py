@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+No device allocation anywhere: params/opt/cache structures come from
+``jax.eval_shape`` over the real init functions, so the dry-run lowers
+exactly what the runtime would execute.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec, get_config
+from repro.configs.base import ModelConfig
+from repro.models import init_cache, init_params
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_sds(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {}
+    s_text = seq
+    if cfg.frontend == "vision_stub":
+        s_text = seq - cfg.n_patches
+        spec["patches"] = SDS((batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encoder_decoder:
+        spec["frames"] = SDS((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    spec["tokens"] = SDS((batch, s_text), jnp.int32)
+    spec["labels"] = SDS((batch, seq), jnp.int32)
+    return spec
+
+
+def params_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_sds(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: adamw.init(init_params(cfg, jax.random.PRNGKey(0))))
+
+
+def cache_sds(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def input_specs(arch: str, shape: ShapeSpec) -> Dict[str, Any]:
+    """All abstract inputs for the cell's step function."""
+    cfg = get_config(arch)
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {"cfg": cfg, "kind": shape.kind,
+                           "params": params_sds(cfg)}
+    if shape.kind == "train":
+        out["batch"] = batch_sds(cfg, b, s)
+        out["opt_state"] = opt_sds(cfg)
+    elif shape.kind == "prefill":
+        out["batch"] = {k: v for k, v in batch_sds(cfg, b, s).items()
+                        if k != "labels"}
+    elif shape.kind == "decode":
+        out["cache"] = cache_sds(cfg, b, s)
+        out["token"] = SDS((b,), jnp.int32)
+        out["pos"] = SDS((b,), jnp.int32)
+    return out

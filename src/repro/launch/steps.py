@@ -1,0 +1,115 @@
+"""Jitted step builders with production shardings attached."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.dist.ctx import sharding_ctx
+from repro.launch.mesh import dp_axes_of
+from repro.models import RunFlags, decode_step, forward_train, prefill
+from repro.optim import adamw
+
+
+def make_train_fn(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                  flags: RunFlags = RunFlags()):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return forward_train(cfg, p, batch, flags)
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        # keep the gradient all-reduce in bf16: without the barrier XLA
+        # hoists the optimizer's f32 cast above the collective (§Perf)
+        grads = jax.lax.optimization_barrier(grads)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                               params)
+        return new_params, new_opt, {**metrics, **om}
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, flags: RunFlags = RunFlags(remat="none")):
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, flags)
+    return prefill_step
+
+
+def make_serve_fn(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return decode_step(cfg, params, cache, token, pos)
+    return serve_step
+
+
+def jit_cell(mesh, specs, *, strategy: str = "fsdp",
+             opt_cfg: Optional[adamw.AdamWConfig] = None,
+             flags: RunFlags = RunFlags(), donate: bool = True):
+    """Build the jitted step for one (arch x shape) cell under ``mesh``.
+
+    Returns (jitted_fn, abstract_args) ready for .lower(*args).
+    """
+    cfg, kind = specs["cfg"], specs["kind"]
+    if kind == "decode" and strategy == "fsdp":
+        strategy = "tp_serve"   # inference TP: no per-layer weight gathers
+    pspec = shd.param_specs(specs["params"], mesh, strategy)
+    psh = shd.to_named(pspec, mesh)
+    ctx_kw = dict(dp_axes=dp_axes_of(mesh), tp_axis="model")
+
+    if kind == "train":
+        opt_cfg = opt_cfg or adamw.AdamWConfig()
+        fn = make_train_fn(cfg, opt_cfg, flags)
+        osh = shd.to_named(shd.opt_specs(specs["opt_state"], pspec, mesh), mesh)
+        bsh = shd.to_named(shd.batch_specs(specs["batch"], mesh), mesh)
+        rep = NamedSharding(mesh, P())
+
+        def wrapped(params, opt_state, batch):
+            with sharding_ctx(mesh, **ctx_kw):
+                return fn(params, opt_state, batch)
+
+        jfn = jax.jit(wrapped,
+                      in_shardings=(psh, osh, bsh),
+                      out_shardings=(psh, osh, rep),
+                      donate_argnums=(0, 1) if donate else ())
+        return jfn, (specs["params"], specs["opt_state"], specs["batch"])
+
+    if kind == "prefill":
+        fn = make_prefill_fn(cfg, RunFlags(remat="none"))
+        bsh = shd.to_named(shd.batch_specs(specs["batch"], mesh), mesh)
+        cache_abs = jax.eval_shape(fn, specs["params"], specs["batch"])[1]
+        csh = shd.to_named(shd.cache_specs(cache_abs, mesh), mesh)
+        b = specs["batch"]["tokens"].shape[0]
+        bsp = shd.batch_specs(
+            {"t": jax.ShapeDtypeStruct((b,), jnp.int32)}, mesh)["t"]
+        lsh = NamedSharding(mesh, P(bsp[0] if len(bsp) else None, "model"))
+
+        def wrapped(params, batch):
+            with sharding_ctx(mesh, **ctx_kw):
+                return fn(params, batch)
+
+        jfn = jax.jit(wrapped, in_shardings=(psh, bsh),
+                      out_shardings=(lsh, csh))
+        return jfn, (specs["params"], specs["batch"])
+
+    if kind == "decode":
+        fn = make_serve_fn(cfg)
+        csh = shd.to_named(shd.cache_specs(specs["cache"], mesh), mesh)
+        bsp = shd.batch_specs({"t": specs["token"]}, mesh)["t"]
+        tsh = NamedSharding(mesh, bsp)
+        dp0 = bsp[0] if len(bsp) else None
+        lsh = NamedSharding(mesh, P(dp0, "model"))
+
+        def wrapped(params, cache, token, pos):
+            with sharding_ctx(mesh, **ctx_kw):
+                return fn(params, cache, token, pos)
+
+        jfn = jax.jit(wrapped, in_shardings=(psh, csh, tsh, tsh),
+                      out_shardings=(lsh, csh),
+                      donate_argnums=(1,) if donate else ())
+        return jfn, (specs["params"], specs["cache"], specs["token"],
+                     specs["pos"])
+
+    raise ValueError(kind)

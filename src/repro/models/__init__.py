@@ -1,0 +1,7 @@
+"""Model substrate: 10 assigned architectures behind one API."""
+
+from .lm import (RunFlags, decode_step, forward_train, init_cache,
+                 init_params, layer_groups, prefill, serve_step)
+
+__all__ = ["RunFlags", "decode_step", "forward_train", "init_cache",
+           "init_params", "layer_groups", "prefill", "serve_step"]

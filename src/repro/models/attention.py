@@ -1,0 +1,306 @@
+"""Attention: blockwise flash (prefill/train) + cached decode, GQA/SWA aware.
+
+The flash path is structured exactly like a TPU kernel would be — outer
+scan over query blocks, inner *dynamically bounded* loop over key/value
+blocks (causal and sliding-window tiles that would be fully masked are
+genuinely skipped, not just masked), running max/sum softmax in fp32.
+``roofline/analysis.py`` relies on this structure: the inner-loop body is
+exposed as a probe (`kv_tile_probe`) and trip counts are analytic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _tile_scores(q, k, scale):
+    """q: (B, L, qb, Hkv, G, hd); k: (B, kb, Hkv, hd)
+    -> (B, L, Hkv, G, qb, kb) fp32. L = q-block lanes (sharded axis)."""
+    return jnp.einsum("blqhgd,bkhd->blhgqk", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _tile_mask(q_pos, k_pos, causal, window):
+    """q_pos: (L, qb); k_pos: (kb,) -> (L, qb, kb) bool."""
+    mask = jnp.ones(q_pos.shape + k_pos.shape, bool)
+    if causal:
+        mask &= q_pos[..., None] >= k_pos[None, None, :]
+    if window:
+        mask &= q_pos[..., None] - k_pos[None, None, :] < window
+    return mask
+
+
+def kv_tile_update(carry, q, k, v, q_pos, k_pos, scale, causal, window):
+    """One flash tile step over all lanes: update (m, l, acc).
+
+    q: (B, L, qb, Hkv, G, hd); carry fp32: m/l (B, L, Hkv, G, qb),
+    acc (B, L, Hkv, G, qb, hd).
+    """
+    m, l, acc = carry
+    s = _tile_scores(q, k, scale)                      # (B,L,Hkv,G,qb,kb)
+    mask = _tile_mask(q_pos, k_pos, causal, window)    # (L,qb,kb)
+    s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(-1)
+    pv = jnp.einsum("blhgqk,bkhd->blhgqd", p, v.astype(jnp.float32))
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def _factor_blocks(n_q: int, shards: int = 16):
+    """Factor the q-block axis into (lanes, outer). Lanes stay a REAL
+    (shardable) tensor dim — scanning over a sharded dim forces XLA to
+    all-gather q/out/dout per layer (measured 5x 1-2GB fp32 gathers per
+    layer; EXPERIMENTS §Perf iteration 5). Lane l owns the contiguous
+    blocks [l*outer, (l+1)*outer), matching contiguous sequence sharding."""
+    lanes = 1
+    for cand in range(min(shards, n_q), 0, -1):
+        if n_q % cand == 0 and shards % cand == 0:
+            lanes = cand
+            break
+    return lanes, n_q // lanes
+
+
+def _lane_bounds(blk_lo, blk_hi, *, q_offset, block_q, block_k, n_k,
+                 causal, window):
+    """kv-block range [lo, hi) covering q blocks blk_lo..blk_hi (incl)."""
+    hi = n_k
+    lo = 0
+    if causal:
+        hi = jnp.minimum(
+            (q_offset + (blk_hi + 1) * block_q + block_k - 1) // block_k, n_k)
+    if window:
+        lo = jnp.maximum((q_offset + blk_lo * block_q - window) // block_k, 0)
+    return lo, hi
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    """Returns (out (B,Sq,Hq,hd), lse (B,Hkv,G,Sq))."""
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    n_q, n_k = sq // block_q, skv // block_k
+    lanes, n_outer = _factor_blocks(n_q)
+    # lane-major layout: lane l holds blocks l*n_outer + o
+    qb = q.reshape(b, lanes, n_outer, block_q, hkv, g, hd)
+    lane_ids = jnp.arange(lanes)
+
+    def outer_step(oi):
+        q_tile = qb[:, :, oi]                          # (b,L,bq,hkv,g,hd)
+        blk = lane_ids * n_outer + oi                  # (L,)
+        q_pos = (q_offset + blk[:, None] * block_q
+                 + jnp.arange(block_q)[None])          # (L,bq)
+        lo, hi = _lane_bounds(blk[0], blk[-1], q_offset=q_offset,
+                              block_q=block_q, block_k=block_k, n_k=n_k,
+                              causal=causal, window=window)
+        m0 = jnp.full((b, lanes, hkv, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, lanes, hkv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, lanes, hkv, g, block_q, hd), jnp.float32)
+
+        def body(ki, carry):
+            k_tile = lax.dynamic_slice_in_dim(k, ki * block_k, block_k, 1)
+            v_tile = lax.dynamic_slice_in_dim(v, ki * block_k, block_k, 1)
+            k_pos = ki * block_k + jnp.arange(block_k)
+            return kv_tile_update(carry, q_tile, k_tile, v_tile,
+                                  q_pos, k_pos, scale, causal, window)
+
+        m, l, acc = lax.fori_loop(lo, hi, body, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out.astype(q.dtype), lse               # (b,L,hkv,g,bq[,hd])
+
+    if n_outer == 1:
+        outs, lses = outer_step(0)
+        outs, lses = outs[None], lses[None]
+    else:
+        _, (outs, lses) = lax.scan(lambda _, oi: (None, outer_step(oi)),
+                                   None, jnp.arange(n_outer))
+    # outs: (n_outer, b, L, hkv, g, bq, hd) -> (b, sq, hq, hd)
+    out = outs.transpose(1, 2, 0, 5, 3, 4, 6).reshape(b, sq, hq, hd)
+    # lses: (n_outer, b, L, hkv, g, bq) -> (b, hkv, g, sq)
+    lse = lses.transpose(1, 3, 4, 2, 0, 5).reshape(b, hkv, g, sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, q_offset,
+                    block_q, block_k):
+    """Blockwise flash backward (same lane structure as forward; big
+    tensors stay bf16 outside the tile loop)."""
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    n_q, n_k = sq // block_q, skv // block_k
+    lanes, n_outer = _factor_blocks(n_q)
+    qb = q.reshape(b, lanes, n_outer, block_q, hkv, g, hd)
+    dob = dout.reshape(b, lanes, n_outer, block_q, hkv, g, hd)
+    ob = out.reshape(b, lanes, n_outer, block_q, hkv, g, hd)
+    lseb = lse.reshape(b, hkv, g, lanes, n_outer, block_q)
+    lane_ids = jnp.arange(lanes)
+
+    dk0 = jnp.zeros((b, skv, hkv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, skv, hkv, hd), jnp.float32)
+
+    def outer_step(carry, oi):
+        dk_acc, dv_acc = carry
+        q_tile = qb[:, :, oi]                                # (b,L,bq,h,g,d)
+        do_t = jnp.einsum("blqhgd->blhgqd",
+                          dob[:, :, oi].astype(jnp.float32))
+        o_t = jnp.einsum("blqhgd->blhgqd",
+                         ob[:, :, oi].astype(jnp.float32))
+        lse_t = lseb[:, :, :, :, oi]                         # (b,hkv,g,L,bq)
+        lse_t = lse_t.transpose(0, 3, 1, 2, 4)               # (b,L,hkv,g,bq)
+        d_t = jnp.sum(do_t * o_t, axis=-1)                   # (b,L,hkv,g,bq)
+        blk = lane_ids * n_outer + oi
+        q_pos = (q_offset + blk[:, None] * block_q
+                 + jnp.arange(block_q)[None])                # (L,bq)
+        lo, hi = _lane_bounds(blk[0], blk[-1], q_offset=q_offset,
+                              block_q=block_q, block_k=block_k, n_k=n_k,
+                              causal=causal, window=window)
+        dq0 = jnp.zeros((b, lanes, hkv, g, block_q, hd), jnp.float32)
+
+        def body(ki, inner):
+            dq_t, dk_a, dv_a = inner
+            k_tile = lax.dynamic_slice_in_dim(k, ki * block_k, block_k, 1)
+            v_tile = lax.dynamic_slice_in_dim(v, ki * block_k, block_k, 1)
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = _tile_scores(q_tile, k_tile, scale)   # (b,L,hkv,g,bq,bk)
+            mask = _tile_mask(q_pos, k_pos, causal, window)
+            s = jnp.where(mask[None, :, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_t[..., None])
+            dv_blk = jnp.einsum("blhgqk,blhgqd->bkhd", p, do_t)
+            dp = jnp.einsum("blhgqd,bkhd->blhgqk", do_t,
+                            v_tile.astype(jnp.float32))
+            ds = p * (dp - d_t[..., None]) * scale
+            dq_t = dq_t + jnp.einsum("blhgqk,bkhd->blhgqd", ds,
+                                     k_tile.astype(jnp.float32))
+            dk_blk = jnp.einsum("blhgqk,blqhgd->bkhd", ds,
+                                q_tile.astype(jnp.float32))
+            dk_a = lax.dynamic_update_slice_in_dim(
+                dk_a, lax.dynamic_slice_in_dim(dk_a, ki * block_k, block_k, 1)
+                + dk_blk, ki * block_k, 1)
+            dv_a = lax.dynamic_update_slice_in_dim(
+                dv_a, lax.dynamic_slice_in_dim(dv_a, ki * block_k, block_k, 1)
+                + dv_blk, ki * block_k, 1)
+            return dq_t, dk_a, dv_a
+
+        dq_t, dk_acc, dv_acc = lax.fori_loop(lo, hi, body,
+                                             (dq0, dk_acc, dv_acc))
+        return (dk_acc, dv_acc), dq_t
+
+    if n_outer == 1:
+        (dk, dv), dq_t = outer_step((dk0, dv0), 0)
+        dqs = dq_t[None]
+    else:
+        (dk, dv), dqs = lax.scan(outer_step, (dk0, dv0),
+                                 jnp.arange(n_outer))
+    # dqs: (n_outer, b, L, hkv, g, bq, hd) -> (b, sq, hq, hd)
+    dq = dqs.transpose(1, 2, 0, 5, 3, 4, 6).reshape(b, sq, hq, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, block_q, block_k):
+    return _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k)[0]
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, block_q, block_k):
+    out, lse = _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, block_q, block_k, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, causal, window,
+                           q_offset, block_q, block_k)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _pick_block(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is <= target."""
+    t = max(1, min(target, s))
+    while s % t:
+        t -= 1
+    return t
+
+
+def block_plan(sq: int, skv: int, block_q: int = 512, block_k: int = 512,
+               shards: int = 16):
+    """(block_q, block_k) used by flash_attention — also consumed by the
+    roofline trip-count correction. q blocks sized so n_q is a multiple of
+    the model-axis width when possible (keeps the q-block scan aligned
+    with sequence sharding)."""
+    bq = _pick_block(sq, min(block_q, max(sq // shards, 128)))
+    bk = _pick_block(skv, block_k)
+    return bq, bk
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0, block_q: int = 512,
+                    block_k: int = 512) -> jax.Array:
+    """q: (B, Sq, Hq, hd); k,v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    Blockwise flash with dynamic causal/SWA tile skipping in forward AND
+    backward (custom VJP). ``q_offset``: absolute position of q[0].
+    """
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    block_q, block_k = block_plan(sq, skv, block_q, block_k)
+    return _flash(q, k, v, causal, window, q_offset, block_q, block_k)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-token decode. q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd);
+    lengths: (B,) number of valid cache positions (ring-buffer aware for SWA).
+    """
+    b, s, hkv, hd = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = hd ** -0.5
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, :]
+    valid = pos < lengths[:, None]
+    if window:
+        valid &= pos >= (lengths[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference quadratic attention (tests only — materializes S^2)."""
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)

@@ -1,0 +1,600 @@
+"""Unified causal-LM model covering all 10 assigned architectures.
+
+One parameter/pytree layout, four entry points:
+
+    init_params(cfg, key)                         -> params
+    forward_train(cfg, params, batch)             -> (loss, metrics)
+    prefill(cfg, params, batch)                   -> (last_logits, cache)
+    decode_step(cfg, params, cache, token, pos)   -> (logits, cache)
+
+Layers are stacked per repeating pattern group and executed with
+``lax.scan`` (+ optional remat), so the HLO stays one-layer-sized — the
+roofline module corrects cost_analysis trip counts (DESIGN.md §5).
+Block kinds: "attn" (full/SWA GQA), "local" (SWA in hybrid patterns),
+"rglru" (RecurrentGemma), "rwkv" (RWKV6). MoE replaces the dense FFN when
+``cfg.n_experts > 0``. Whisper adds an encoder stack + cross-attention;
+VLM/audio frontends are stubs per the assignment (precomputed embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.dist.ctx import constrain
+from . import rglru as rg
+from . import rwkv6 as rk
+from .attention import decode_attention, flash_attention
+from .layers import (dense_init, gelu_mlp, layer_norm, rms_norm, rope,
+                     sinusoidal_pos, swiglu)
+from .moe import aux_load_balance_loss, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def layer_groups(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
+    """[(unit_pattern, repeats)] — scan units covering cfg.pattern."""
+    pat = cfg.pattern
+    if len(set(pat)) == 1:
+        return [((pat[0],), len(pat))]
+    period = len(cfg.layer_pattern)
+    n_full = len(pat) // period
+    groups: List[Tuple[Tuple[str, ...], int]] = []
+    if n_full:
+        groups.append((tuple(cfg.layer_pattern), n_full))
+    rem = pat[n_full * period:]
+    if rem:
+        groups.append((tuple(rem), 1))
+    return groups
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.is_encoder_decoder:
+        return layer_norm(x, p["s"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p, cfg.norm_eps)
+
+
+def _norm_init(cfg: ModelConfig, d: int):
+    if cfg.is_encoder_decoder:
+        return {"s": jnp.zeros((d,), jnp.bfloat16),
+                "b": jnp.zeros((d,), jnp.bfloat16)}
+    return jnp.zeros((d,), jnp.bfloat16)
+
+
+def use_rope(cfg: ModelConfig) -> bool:
+    return not cfg.is_encoder_decoder
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _init_mlp(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.is_encoder_decoder:   # gelu MLP with biases (whisper-style)
+        return {"w_up": dense_init(k1, (d, f)),
+                "b_up": jnp.zeros((f,), jnp.bfloat16),
+                "w_down": dense_init(k2, (f, d)),
+                "b_down": jnp.zeros((d,), jnp.bfloat16)}
+    return {"w_gate": dense_init(k1, (d, f)), "w_up": dense_init(k2, (d, f)),
+            "w_down": dense_init(k3, (f, d))}
+
+
+def _init_moe(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w1": dense_init(ks[1], (e, d, f), in_axis=1),
+        "w3": dense_init(ks[2], (e, d, f), in_axis=1),
+        "w2": dense_init(ks[3], (e, f, d), in_axis=1),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        p.update(shared_w1=dense_init(ks[4], (d, fs)),
+                 shared_w3=dense_init(ks[5], (d, fs)),
+                 shared_w2=dense_init(ks[6], (fs, d)),
+                 shared_gate=dense_init(ks[7], (d,)))
+    return p
+
+
+def _init_attn(cfg: ModelConfig, key, cross: bool = False) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], (d, hq * hd)),
+         "wk": dense_init(ks[1], (d, hkv * hd)),
+         "wv": dense_init(ks[2], (d, hkv * hd)),
+         "wo": dense_init(ks[3], (hq * hd, d))}
+    if cfg.qkv_bias and not cross:
+        p.update(bq=jnp.zeros((hq * hd,), jnp.bfloat16),
+                 bk=jnp.zeros((hkv * hd,), jnp.bfloat16),
+                 bv=jnp.zeros((hkv * hd,), jnp.bfloat16))
+    return p
+
+
+def _init_layer(cfg: ModelConfig, kind: str, key,
+                with_cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if kind in ("attn", "local"):
+        p = {"ln1": _norm_init(cfg, d), "attn": _init_attn(cfg, ks[0]),
+             "ln2": _norm_init(cfg, d)}
+        p["mlp"] = (_init_moe(cfg, ks[1]) if cfg.n_experts
+                    else _init_mlp(cfg, ks[1]))
+        if with_cross:
+            p["ln_x"] = _norm_init(cfg, d)
+            p["cross"] = _init_attn(cfg, ks[2], cross=True)
+        return p
+    if kind == "rglru":
+        return {"ln1": _norm_init(cfg, d), "rg": rg.init_rglru_params(ks[0], d),
+                "ln2": _norm_init(cfg, d), "mlp": _init_mlp(cfg, ks[1])}
+    if kind == "rwkv":
+        return {"ln1": _norm_init(cfg, d), "ln2": _norm_init(cfg, d),
+                "rwkv": rk.init_rwkv_params(ks[0], d, cfg.d_ff,
+                                            cfg.rwkv_head_size)}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    keys = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (vp, d), in_axis=1),
+        "final_norm": _norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (d, vp))
+
+    def stack_group(base_key, unit_pattern, repeats, with_cross=False):
+        def one(rkey):
+            uks = jax.random.split(rkey, len(unit_pattern))
+            return {f"u{j}": _init_layer(cfg, kind, uks[j], with_cross)
+                    for j, kind in enumerate(unit_pattern)}
+        reps = [one(k) for k in jax.random.split(base_key, repeats)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+    params["blocks"] = [
+        stack_group(jax.random.fold_in(keys[2], gi), unit, reps,
+                    with_cross=cfg.is_encoder_decoder)
+        for gi, (unit, reps) in enumerate(layer_groups(cfg))]
+
+    if cfg.is_encoder_decoder:
+        params["enc_blocks"] = stack_group(keys[3], ("attn",),
+                                           cfg.n_encoder_layers)
+        params["enc_norm"] = _norm_init(cfg, d)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks (single-layer application)
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(cfg, p, x):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(b, s, hq, hd), k.reshape(b, s, hkv, hd),
+            v.reshape(b, s, hkv, hd))
+
+
+def _attn_sub(cfg, p, x, positions, mode, cache, *, causal, window):
+    """Self-attention sublayer. Returns (out, new_cache_entry)."""
+    b, s, _ = x.shape
+    q, k, v = _proj_qkv(cfg, p, x)
+    if use_rope(cfg):
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if mode != "decode":
+        # flash loop wants whole-sequence K/V per shard: gather once here
+        # (q stays sequence-sharded; see DESIGN.md sharding notes)
+        k = constrain(k, ("dp", None, None, None))
+        v = constrain(v, ("dp", None, None, None))
+        q = constrain(q, ("dp", "tp", None, None))
+
+    if mode == "decode":
+        s_c = cache["k"].shape[1]
+        slot = positions[:, 0] % s_c          # ring slot per batch row
+        # masked (elementwise) update instead of scatter: a scatter across
+        # the sequence-sharded cache makes SPMD all-gather the whole cache
+        # per layer (~3.2GB x 48 at 14B decode_32k; EXPERIMENTS §Perf)
+        mask = (jnp.arange(s_c)[None, :] == slot[:, None])[..., None, None]
+        kc = jnp.where(mask, k[:, 0][:, None], cache["k"])
+        vc = jnp.where(mask, v[:, 0][:, None], cache["v"])
+        lengths = jnp.minimum(positions[:, 0] + 1, s_c)
+        out = decode_attention(q, kc, vc, lengths)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        out = _checkpoint_name(out, "attn_out")
+        new_cache = None
+        if mode == "prefill":
+            s_c = min(s, window) if window else s
+            new_cache = {"k": k[:, -s_c:], "v": v[:, -s_c:]}
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+    return y, new_cache
+
+
+def _cross_sub(cfg, p, x, cross_kv):
+    """Cross-attention (whisper decoder). cross_kv: {"k","v"} (B,Senc,H,hd)."""
+    b, s, _ = x.shape
+    hd, hq = cfg.head_dim, cfg.n_heads
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, hq, hd)
+    out = flash_attention(q, cross_kv["k"], cross_kv["v"], causal=False)
+    return jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1), p["wo"])
+
+
+def _moe_impl_auto(t: int):
+    """Pick the shard_map TP-MoE when a mesh ctx is active and the token
+    count divides the data axes (see dist/moe_ep.py + EXPERIMENTS §Perf)."""
+    from repro.dist.ctx import current
+    ctx = current()
+    if ctx is None:
+        return None
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    dp_prod = 1
+    for a in ctx.dp_axes:
+        dp_prod *= sizes[a]
+    if t % dp_prod:
+        return None
+    return ctx
+
+
+def _ffn_sub(cfg, p, x, mode):
+    """Dense or MoE FFN. Returns (out, aux_loss)."""
+    if cfg.n_experts:
+        b, s, d = x.shape
+        flat = constrain(x.reshape(b * s, d), ("dp", None))
+        if _moe_impl_auto(b * s) is not None:
+            from repro.dist.moe_ep import moe_ffn_tp
+            out, logits, idx = moe_ffn_tp(p, flat, n_experts=cfg.n_experts,
+                                          top_k=cfg.top_k,
+                                          cap_factor=cfg.moe_cap_factor)
+        else:
+            out, logits, idx = moe_ffn(p, flat, n_experts=cfg.n_experts,
+                                       top_k=cfg.top_k,
+                                       cap_factor=cfg.moe_cap_factor)
+        aux = (aux_load_balance_loss(logits, idx, cfg.n_experts)
+               if mode == "train" else jnp.float32(0))
+        return out.reshape(b, s, d), aux
+    if cfg.is_encoder_decoder:
+        return (gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"]),
+                jnp.float32(0))
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), jnp.float32(0)
+
+
+def apply_layer(cfg, kind, p, x, positions, mode, cache,
+                cross_kv=None, causal=True):
+    """One block. Returns (x, aux, new_cache_entry)."""
+    aux = jnp.float32(0)
+    if kind in ("attn", "local"):
+        window = cfg.window if (kind == "local" or cfg.attn_kind == "swa") else 0
+        h = _norm(cfg, p["ln1"], x)
+        out, new_c = _attn_sub(cfg, p["attn"], h, positions, mode, cache,
+                               causal=causal, window=window)
+        x = x + out
+        if "cross" in p and cross_kv is not None:
+            h = _norm(cfg, p["ln_x"], x)
+            x = x + _cross_sub(cfg, p["cross"], h, cross_kv)
+        h = _norm(cfg, p["ln2"], x)
+        out, aux = _ffn_sub(cfg, p["mlp"], h, mode)
+        return x + out, aux, new_c
+    if kind == "rglru":
+        state = cache if cache is not None else rg.init_rg_state(
+            x.shape[0], cfg.d_model)
+        h = _norm(cfg, p["ln1"], x)
+        fn = rg.rglru_decode if mode == "decode" else rg.rglru_block
+        out, new_state = fn(p["rg"], h, state)
+        x = x + out
+        h = _norm(cfg, p["ln2"], x)
+        out, _ = _ffn_sub(cfg, p["mlp"], h, mode)
+        return x + out, aux, new_state
+    if kind == "rwkv":
+        state = cache if cache is not None else rk.init_rwkv_state(
+            x.shape[0], cfg.n_rwkv_heads, cfg.rwkv_head_size, cfg.d_model)
+        h = _norm(cfg, p["ln1"], x)
+        out, state = rk.time_mix(p["rwkv"], h, state,
+                                 chunked=(mode != "decode"))
+        x = x + out
+        h = _norm(cfg, p["ln2"], x)
+        out, state = rk.channel_mix(p["rwkv"], h, state)
+        return x + out, aux, state
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache init (shape source of truth for decode / dry-run specs)
+# ---------------------------------------------------------------------------
+
+def _empty_cache_entry(cfg, kind, batch, max_len):
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    if kind in ("attn", "local"):
+        window = cfg.window if (kind == "local" or cfg.attn_kind == "swa") else 0
+        s_c = min(max_len, window) if window else max_len
+        return {"k": jnp.zeros((batch, s_c, hkv, hd), jnp.bfloat16),
+                "v": jnp.zeros((batch, s_c, hkv, hd), jnp.bfloat16)}
+    if kind == "rglru":
+        return rg.init_rg_state(batch, cfg.d_model)
+    if kind == "rwkv":
+        return rk.init_rwkv_state(batch, cfg.n_rwkv_heads,
+                                  cfg.rwkv_head_size, cfg.d_model)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    cache = []
+    for unit, reps in layer_groups(cfg):
+        entry = {f"u{j}": jax.tree.map(
+            lambda x: jnp.tile(x[None], (reps,) + (1,) * x.ndim),
+            _empty_cache_entry(cfg, kind, batch, max_len))
+            for j, kind in enumerate(unit)}
+        cache.append(entry)
+    if cfg.is_encoder_decoder:
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+        senc = cfg.encoder_seq
+        reps = layer_groups(cfg)[0][1]
+        cache.append({"cross": {
+            "k": jnp.zeros((reps, batch, senc, hkv, hd), jnp.bfloat16),
+            "v": jnp.zeros((reps, batch, senc, hkv, hd), jnp.bfloat16)}})
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# full-model passes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    # remat policy: none | full (nothing_saveable) | attn_out (save flash
+    # outputs — skips the attention recompute AND its K/V re-gather in the
+    # backward pass; ~33MB/layer/device saved state. See EXPERIMENTS §Perf.)
+    remat: str = "attn_out"
+    scan_layers: bool = True
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x):
+    """Identity with a bf16 cotangent barrier.
+
+    The fp32 loss/logits make every upstream cotangent fp32, which doubles
+    the bytes of every weight-gradient all-reduce and drags fp32 weight
+    all-gathers through the backward (measured ~11GB/layer/device fp32
+    collectives at 110B; EXPERIMENTS §Perf iteration 6). Casting the
+    residual-stream cotangent to bf16 at each layer boundary is the
+    standard mixed-precision contract: weights/activations bf16, master
+    accumulation fp32 in the optimizer only.
+    """
+    return x
+
+
+def _gcb_fwd(x):
+    return x, ()
+
+
+def _gcb_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+grad_cast_bf16.defvjp(_gcb_fwd, _gcb_bwd)
+
+
+def _maybe_remat(fn, flags: RunFlags):
+    if flags.remat == "none":
+        return fn
+    if flags.remat == "attn_out":
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_groups(cfg, params, x, positions, mode, cache, cross_kv, flags,
+                causal=True):
+    """Scan each layer group. cross_kv, if given, is stacked per layer
+    of group 0 (enc-dec has a single decoder group). Returns
+    (x, aux_total, new_cache)."""
+    aux_total = jnp.float32(0)
+    new_cache = []
+    groups = layer_groups(cfg)
+    for gi, (unit, reps) in enumerate(groups):
+        gparams = params["blocks"][gi]
+        gcache = cache[gi] if cache is not None else None
+        gcross = cross_kv if (cross_kv is not None and gi == 0) else None
+
+        def unit_body(carry, xs):
+            xc, auxc = carry
+            p_slice, c_slice, x_slice = xs
+            out_entries = {}
+            for j, kind in enumerate(unit):
+                centry = c_slice[f"u{j}"] if c_slice is not None else None
+                xc, aux, new_c = apply_layer(
+                    cfg, kind, p_slice[f"u{j}"], xc, positions, mode, centry,
+                    cross_kv=x_slice, causal=causal)
+                auxc = auxc + aux
+                if new_c is not None:
+                    out_entries[f"u{j}"] = new_c
+            # sequence-shard the residual carry over the model axis: the
+            # per-layer remat save otherwise dominates HBM (22.5GB f32 at
+            # 3B scale); auto-dropped when seq doesn't divide.
+            xc = constrain(xc, ("dp", "tp" if mode != "decode" else None,
+                                None))
+            if mode == "train":
+                xc = grad_cast_bf16(xc)   # bf16 cotangent barrier (§Perf)
+            return (xc, auxc), (out_entries if out_entries else 0)
+
+        body = _maybe_remat(unit_body, flags)
+        xs = (gparams, gcache, gcross)
+        if flags.scan_layers and reps > 1:
+            (x, aux_total), ys = lax.scan(body, (x, aux_total), xs)
+            new_cache.append(ys if not isinstance(ys, jax.Array) else None)
+        else:
+            ys_list = []
+            for r in range(reps):
+                sl = jax.tree.map(lambda a: a[r], xs)
+                (x, aux_total), y = body((x, aux_total), sl)
+                ys_list.append(y)
+            if ys_list and not isinstance(ys_list[0], int):
+                new_cache.append(jax.tree.map(lambda *a: jnp.stack(a), *ys_list))
+            else:
+                new_cache.append(None)
+    return x, aux_total, new_cache
+
+
+def _encode(cfg, params, frames, flags):
+    """Whisper encoder (stub conv frontend: frames are embeddings)."""
+    b, senc, _ = frames.shape
+    pos = jnp.tile(jnp.arange(senc)[None], (b, 1))
+    x = frames.astype(jnp.bfloat16) + sinusoidal_pos(
+        pos, cfg.d_model).astype(jnp.bfloat16)
+    enc_cfg = dataclasses.replace(
+        cfg, n_layers=cfg.n_encoder_layers, layer_pattern=(), n_experts=0)
+    eparams = {"blocks": [params["enc_blocks"]]}
+    x, _, _ = _run_groups(enc_cfg, eparams, x, pos, "train", None, None,
+                          flags, causal=False)
+    return _norm(cfg, params["enc_norm"], x)
+
+
+def _project_cross(cfg, params, enc):
+    """Per-layer cross K/V from encoder output -> stacked (L,B,Senc,H,hd)."""
+    hd, hkv = cfg.head_dim, cfg.n_kv_heads
+    b, senc, _ = enc.shape
+
+    def per_rep(p):
+        k = jnp.einsum("bsd,de->bse", enc, p["wk"]).reshape(b, senc, hkv, hd)
+        v = jnp.einsum("bsd,de->bse", enc, p["wv"]).reshape(b, senc, hkv, hd)
+        return {"k": k, "v": v}
+
+    return jax.vmap(per_rep)(params["blocks"][0]["u0"]["cross"])
+
+
+def _input_embeds(cfg, params, batch, positions):
+    """Token (+stub-frontend) embedding."""
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.is_encoder_decoder:
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)
+    seq_axis = "tp" if x.shape[1] > 1 else None
+    return constrain(x, ("dp", seq_axis, None))
+
+
+def logits_fn(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:  # mask vocab padding
+        bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab, 0.0, -1e9)
+        logits = logits + bias
+    return constrain(logits, ("dp", None, "tp"))
+
+
+def lm_loss(cfg, logits, labels):
+    """Mean xent over labels >= 0 (fp32).
+
+    Label log-prob extracted with an iota mask (not take_along_axis) so a
+    vocab-sharded logits tensor needs only a tiny psum, never a vocab
+    all-gather (the gather costs ~33GB/device at 110B scale).
+    """
+    cols = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.where(cols == labels[..., None], logits, 0.0)
+    ll = picked.sum(-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - ll) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def _positions_for(cfg, batch):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    total = s + (cfg.n_patches if (cfg.frontend == "vision_stub"
+                                   and "patches" in batch) else 0)
+    return jnp.tile(jnp.arange(total)[None], (b, 1))
+
+
+def forward_train(cfg: ModelConfig, params, batch,
+                  flags: RunFlags = RunFlags()):
+    """batch: tokens/labels (+frames|patches). Returns (loss, metrics)."""
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        enc = _encode(cfg, params, batch["frames"], flags)
+        cross_kv = _project_cross(cfg, params, enc)
+    positions = _positions_for(cfg, batch)
+    x = _input_embeds(cfg, params, batch, positions)
+    x, aux, _ = _run_groups(cfg, params, x, positions, "train", None,
+                            cross_kv, flags)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    loss = lm_loss(cfg, logits, batch["labels"])
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch, flags: RunFlags = RunFlags(),
+            pad_to: int = 0):
+    """Fill the KV/state cache; returns (last_token_logits, cache).
+
+    ``pad_to``: decode headroom — full-attention KV caches are extended to
+    this many slots so subsequent ``decode_step`` calls at pos >= prefill
+    length don't wrap the ring (SWA caches are already rings and keep
+    their window size)."""
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        enc = _encode(cfg, params, batch["frames"], flags)
+        cross_kv = _project_cross(cfg, params, enc)
+    positions = _positions_for(cfg, batch)
+    x = _input_embeds(cfg, params, batch, positions)
+    s_in = positions.shape[1]
+    x, _, cache = _run_groups(cfg, params, x, positions, "prefill", None,
+                              cross_kv, flags)
+    if pad_to and pad_to > s_in:
+        def pad_entry(entry, kind):
+            windowed = cfg.window > 0 and (kind == "local"
+                                           or cfg.attn_kind == "swa")
+            if windowed or not (isinstance(entry, dict) and "k" in entry):
+                return entry            # SWA rings keep their window size
+            pad = [(0, 0)] * entry["k"].ndim
+            pad[2] = (0, pad_to - s_in)
+            return {n: jnp.pad(entry[n], pad) for n in ("k", "v")}
+        cache = [{f"u{j}": pad_entry(grp[f"u{j}"], kind)
+                  for j, kind in enumerate(unit)}
+                 for grp, (unit, _) in zip(cache, layer_groups(cfg))]
+    if cfg.is_encoder_decoder:
+        cache.append({"cross": cross_kv})
+    x = _norm(cfg, params["final_norm"], x[:, -1:])
+    return logits_fn(cfg, params, x)[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos,
+                flags: RunFlags = RunFlags(remat="none")):
+    """One decode step. token: (B,) int32; pos: (B,) int32 (absolute)."""
+    positions = pos[:, None]
+    batch = {"tokens": token[:, None]}
+    x = _input_embeds(cfg, params, batch, positions)
+    cross_kv = None
+    core_cache = cache
+    if cfg.is_encoder_decoder:
+        cross_kv = cache[-1]["cross"]
+        core_cache = cache[:-1]
+    x, _, new_cache = _run_groups(cfg, params, x, positions, "decode",
+                                  core_cache, cross_kv, flags)
+    if cfg.is_encoder_decoder:
+        new_cache.append({"cross": cross_kv})
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], new_cache
+
+
+serve_step = decode_step

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN: top-k routing with fixed capacity.
+
+Two execution paths with identical math:
+
+* ``moe_ffn`` — sort-based grouped dispatch in plain jnp. Tokens are
+  argsorted by expert, packed into a fixed (E, C, d) buffer (drops beyond
+  capacity, like production dropping MoEs), expert FFNs run as one batched
+  einsum, results scatter back weighted by gates. Under pjit the (E, C, d)
+  buffer is sharded on E over the "model" axis (expert parallelism) and
+  XLA inserts the token all-to-alls.
+* ``moe_ffn_ep`` (repro.dist.moe_ep) — explicit shard_map all-to-all EP,
+  used by the distributed runtime; benchmarked against this one in §Perf.
+
+Routing covers both assigned MoE archs: plain top-k (mixtral) and
+shared-experts + top-k with routed-gate normalization (qwen2-moe).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import swiglu
+
+
+def router_topk(logits: jax.Array, top_k: int, normalize: bool = True):
+    """logits: (T, E) -> gates (T, K) fp32, idx (T, K) int32."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    if normalize:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx.astype(jnp.int32)
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int,
+             factor: float = 1.25, multiple: int = 8) -> int:
+    c = int(n_tokens * top_k / n_experts * factor) + 1
+    return max(multiple, ((c + multiple - 1) // multiple) * multiple)
+
+
+def group_tokens(idx: jax.Array, n_experts: int, cap: int):
+    """Sort-based grouping. idx: (T, K) expert choice per token-slot.
+
+    Returns (slot, keep, token_id) each (T*K,): target slot in the packed
+    (E*C) buffer, whether the slot fit under capacity, and source token.
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)            # (T*K,)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos_in_e < cap
+    slot = sorted_e * cap + jnp.minimum(pos_in_e, cap - 1)
+    token_id = (order // k).astype(jnp.int32)
+    return slot.astype(jnp.int32), keep, token_id, order
+
+
+def moe_ffn(p, x: jax.Array, *, n_experts: int, top_k: int,
+            cap_factor: float = 1.25,
+            router_bias_mask: jax.Array | None = None):
+    """x: (T, d) flattened tokens. p: router/w1/w2/w3 (+shared).
+
+    Returns (out (T, d), router_logits (T, E) fp32, idx (T, K)).
+    """
+    t, d = x.shape
+    logits = jnp.einsum("td,de->te", x, p["router"],
+                        preferred_element_type=jnp.float32)
+    if router_bias_mask is not None:   # mask padding experts (EP padding)
+        logits = logits + router_bias_mask
+    gates, idx = router_topk(logits, top_k)
+
+    cap = capacity(t, top_k, n_experts, cap_factor)
+    slot, keep, token_id, order = group_tokens(idx, n_experts, cap)
+
+    # dispatch: scatter tokens to (E*C [+1 overflow], d)
+    buf = jnp.zeros((n_experts * cap + 1, d), x.dtype)
+    tgt = jnp.where(keep, slot, n_experts * cap)
+    buf = buf.at[tgt].set(x[token_id])
+    xe = buf[:-1].reshape(n_experts, cap, d)
+
+    # expert FFNs: batched swiglu over E
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w1"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w2"])
+
+    # combine: gather back, weight by gate prob
+    flat_gate = gates.reshape(-1)[order]
+    y_tok = ye.reshape(-1, d)[jnp.where(keep, slot, 0)]
+    contrib = jnp.where(keep[:, None], y_tok, 0) * flat_gate[:, None].astype(x.dtype)
+    out = jnp.zeros((t, d), x.dtype).at[token_id].add(contrib)
+
+    if "shared_w1" in p:  # qwen2-moe shared experts with sigmoid gate
+        shared = swiglu(x, p["shared_w1"], p["shared_w3"], p["shared_w2"])
+        sg = jax.nn.sigmoid(jnp.einsum("td,d->t", x, p["shared_gate"])
+                            .astype(jnp.float32))
+        out = out + shared * sg[:, None].astype(x.dtype)
+    return out, logits, idx
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array,
+                          n_experts: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fp32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = probs.mean(0)
+    onehot = jax.nn.one_hot(idx[:, 0], n_experts, dtype=jnp.float32)
+    ce = onehot.mean(0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Diagonal gated linear recurrence:
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i x_t) * x_t)
+
+The recurrence is elementwise, so training/prefill uses
+``lax.associative_scan`` (parallel scan, TPU-friendly O(log S) depth);
+decode is the single-step update. A short causal conv1d (width 4)
+precedes the recurrence, as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+RG_C = 8.0
+CONV_W = 4
+
+
+class RgState(NamedTuple):
+    h: jax.Array      # (B, d) recurrent state (fp32)
+    conv: jax.Array   # (B, CONV_W-1, d) trailing inputs for the causal conv
+
+
+def init_rg_state(batch: int, d: int) -> RgState:
+    return RgState(h=jnp.zeros((batch, d), jnp.float32),
+                   conv=jnp.zeros((batch, CONV_W - 1, d), jnp.bfloat16))
+
+
+def _gates(p, x):
+    """log_a (fp32) and gated input b_t (fp32). x: (..., d)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf, p["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xf, p["w_i"].astype(jnp.float32)))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def _conv1d(p, x, conv_state):
+    """Causal depthwise conv width 4. x: (B,S,d); conv_state: (B,3,d)."""
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * p["conv_w"][i].astype(x.dtype)
+              for i in range(CONV_W))
+    new_state = xp[:, -(CONV_W - 1):]
+    return out + p["conv_b"].astype(x.dtype), new_state
+
+
+def rglru_block(p, x: jax.Array, state: RgState) -> Tuple[jax.Array, RgState]:
+    """Full-sequence form. x: (B, S, d) -> (y, new_state)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    u, conv_new = _conv1d(p, u, state.conv)
+    a, b = _gates(p, u)
+
+    # h_t = a_t h_{t-1} + b_t with initial state via a virtual step 0
+    a0 = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b0 = jnp.concatenate([state.h[:, None, :], b], axis=1)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    _, h = lax.associative_scan(combine, (a0, b0), axis=1)
+    h = h[:, 1:]                                   # drop the virtual step
+    y = jnp.einsum("bse,ed->bsd", (gate.astype(jnp.float32) * h).astype(x.dtype),
+                   p["w_out"])
+    return y, RgState(h=h[:, -1], conv=conv_new)
+
+
+def rglru_decode(p, x: jax.Array, state: RgState) -> Tuple[jax.Array, RgState]:
+    """Single-token step. x: (B, 1, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    xp = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)  # (B,4,d)
+    u1 = sum(xp[:, i: i + 1] * p["conv_w"][i].astype(u.dtype)
+             for i in range(CONV_W)) + p["conv_b"].astype(u.dtype)
+    a, b = _gates(p, u1)
+    h = a[:, 0] * state.h + b[:, 0]
+    y = jnp.einsum("bse,ed->bsd", (gate.astype(jnp.float32) * h[:, None]).astype(x.dtype),
+                   p["w_out"])
+    return y, RgState(h=h, conv=xp[:, 1:])
+
+
+def init_rglru_params(key, d: int, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    mk = lambda k, shape: (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+    return {
+        "w_gate": mk(ks[0], (d, d)), "w_x": mk(ks[1], (d, d)),
+        "w_a": mk(ks[2], (d, d)), "w_i": mk(ks[3], (d, d)),
+        "w_out": mk(ks[4], (d, d)),
+        "conv_w": jnp.full((CONV_W, d), 1.0 / CONV_W, dtype),
+        "conv_b": jnp.zeros((d,), dtype),
+        # Lambda init so that a^c in (0.9, 0.999) as in the paper
+        "lam": jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, d)) / RG_C)),
+            jnp.float32),
+    }

@@ -1,0 +1,179 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Per head with state S in R^{hd x hd}:
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+Training/prefill uses the chunkwise-parallel form (intra-chunk "attention"
+matrix + inter-chunk state carry, fp32, chunk=32 for stability); decode is
+the sequential step. A sequential-scan reference validates the chunk form
+in tests. The decay w_t is data-dependent via a low-rank MLP, as in Finch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+CHUNK = 32
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (B, H, hd, hd) wkv state (fp32)
+    shift_t: jax.Array  # (B, d) previous token (time-mix shift)
+    shift_c: jax.Array  # (B, d) previous token (channel-mix shift)
+
+
+def init_rwkv_state(batch: int, n_heads: int, head_size: int, d: int) -> RwkvState:
+    return RwkvState(
+        s=jnp.zeros((batch, n_heads, head_size, head_size), jnp.float32),
+        shift_t=jnp.zeros((batch, d), jnp.bfloat16),
+        shift_c=jnp.zeros((batch, d), jnp.bfloat16))
+
+
+def _shift(x, prev):
+    """Token shift: x_{t-1} with carry. x: (B,S,d); prev: (B,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1), x[:, -1]
+
+
+def _projections(p, x, xx):
+    """r,k,v,g and decay w from mixed inputs. Shapes (B,S,H,hd)."""
+    b, s, d = x.shape
+    h, hd = p["u"].shape
+
+    def mix(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    def proj(name):
+        y = jnp.einsum("bsd,de->bse", mix(p[f"mu_{name}"]), p[f"w_{name}"])
+        return y.reshape(b, s, h, hd)
+
+    r, k, v = proj("r"), proj("k"), proj("v")
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["w_g"]))
+    # data-dependent decay (low-rank): w in (0,1), fp32 for stability
+    wx = jnp.tanh(jnp.einsum("bsd,dr->bsr", mix(p["mu_w"]), p["w_w1"]))
+    wlog = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,re->bse", wx.astype(jnp.float32), p["w_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)  # decay in (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunkwise-parallel wkv. r,k,v,w: (B,S,H,hd) — w fp32; s0: (B,H,hd,hd)."""
+    b, s, h, hd = r.shape
+    assert s % CHUNK == 0, (s, CHUNK)
+    n = s // CHUNK
+    rf = r.astype(jnp.float32).reshape(b, n, CHUNK, h, hd)
+    kf = k.astype(jnp.float32).reshape(b, n, CHUNK, h, hd)
+    vf = v.astype(jnp.float32).reshape(b, n, CHUNK, h, hd)
+    wf = w.reshape(b, n, CHUNK, h, hd)
+    lw = jnp.cumsum(jnp.log(jnp.maximum(wf, 1e-30)), axis=2)  # (B,N,L,H,hd)
+    lw_prev = lw - jnp.log(jnp.maximum(wf, 1e-30))            # cum through t-1
+    q_in = rf * jnp.exp(lw_prev)      # decays vs chunk start
+    k_out = kf * jnp.exp(-lw)         # inverse decay for sources
+    # intra-chunk "attention": A[t,s] = q_in_t . k_out_s, strictly lower
+    A = jnp.einsum("bnthe,bnshe->bnhts", q_in, k_out)
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    intra = jnp.einsum("bnhts,bnshe->bnthe", A, vf)
+    # diagonal (bonus u) term
+    diag = jnp.einsum("bthe,he,bthe->bth", rf.reshape(b, s, h, hd),
+                      u, kf.reshape(b, s, h, hd)).reshape(b, n, CHUNK, h)
+    intra = intra + diag[..., None] * vf
+
+    # inter-chunk: carry state across chunks (scan over N)
+    decay_end = jnp.exp(lw[:, :, -1])                          # (B,N,H,hd)
+    kv_chunk = jnp.einsum("bnshe,bnshf->bnhef",
+                          kf * jnp.exp(lw[:, :, -1:] - lw), vf)  # (B,N,H,hd,hd)
+
+    def carry_fn(s_prev, xs):
+        d_end, kv_c = xs                   # (B,H,hd), (B,H,hd,hd)
+        s_new = d_end[..., None] * s_prev + kv_c
+        return s_new, s_prev
+
+    s_last, s_starts = lax.scan(
+        carry_fn, s0,
+        (decay_end.transpose(1, 0, 2, 3), kv_chunk.transpose(1, 0, 2, 3, 4)))
+    s_starts = s_starts.transpose(1, 0, 2, 3, 4)               # (B,N,H,hd,hd)
+    inter = jnp.einsum("bnthe,bnhef->bnthf", q_in, s_starts)
+    out = (intra + inter).reshape(b, s, h, hd)
+    return out, s_last
+
+
+def _wkv_sequential(r, k, v, w, u, s0):
+    """Reference recurrence (tests + decode). Same shapes as chunked."""
+    b, s, h, hd = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs  # (B,H,hd)
+        out = jnp.einsum("bhe,bhef->bhf", rt,
+                         state + u[None, :, :, None] * kt[..., None] * vt[..., None, :])
+        state = wt[..., None] * state + kt[..., None] * vt[..., None, :]
+        return state, out
+
+    xs = tuple(a.astype(jnp.float32).transpose(1, 0, 2, 3)
+               for a in (r, k, v, w))
+    s_last, outs = lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), s_last
+
+
+def time_mix(p, x, state: RwkvState, chunked: bool = True):
+    """RWKV6 time-mix block. x: (B,S,d)."""
+    b, s, d = x.shape
+    h, hd = p["u"].shape
+    xx, last = _shift(x, state.shift_t)
+    r, k, v, g, w = _projections(p, x, xx)
+    wkv = _wkv_chunked if (chunked and s % CHUNK == 0) else _wkv_sequential
+    o, s_new = wkv(r, k, v, w, p["u"], state.s)
+    # per-head group norm
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * lax.rsqrt(var + 1e-5)
+    o = o * (1 + p["ln_w"].astype(jnp.float32)) + p["ln_b"].astype(jnp.float32)
+    y = jnp.einsum("bse,ed->bsd", (o.reshape(b, s, d) * g.astype(jnp.float32)
+                                   ).astype(x.dtype), p["w_o"])
+    return y, state._replace(s=s_new, shift_t=last)
+
+
+def channel_mix(p, x, state: RwkvState):
+    """RWKV channel-mix (squared-relu FFN with token shift)."""
+    xx, last = _shift(x, state.shift_c)
+
+    def mix(mu):
+        return x + (xx - x) * mu.astype(x.dtype)
+
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mix(p["mu_cr"]), p["w_cr"]))
+    kk = jnp.einsum("bsd,df->bsf", mix(p["mu_ck"]), p["w_ck"])
+    kk = jnp.square(jax.nn.relu(kk))
+    y = rgate * jnp.einsum("bsf,fd->bsd", kk, p["w_cv"])
+    return y, state._replace(shift_c=last)
+
+
+def init_rwkv_params(key, d: int, d_ff: int, head_size: int,
+                     dtype=jnp.bfloat16):
+    h = d // head_size
+    lora = 64
+    ks = jax.random.split(key, 10)
+    std = d ** -0.5
+    mk = lambda k, shape, s=std: (jax.random.normal(k, shape, jnp.float32) * s
+                                  ).astype(dtype)
+    p = {
+        "w_r": mk(ks[0], (d, d)), "w_k": mk(ks[1], (d, d)),
+        "w_v": mk(ks[2], (d, d)), "w_g": mk(ks[3], (d, d)),
+        "w_o": mk(ks[4], (d, d)),
+        "w_w1": mk(ks[5], (d, lora)), "w_w2": mk(ks[6], (lora, d), lora ** -0.5),
+        "w0": jnp.full((d,), -2.0, jnp.float32),  # exp(-exp(-2)) ~ 0.87 decay
+        "u": (jax.random.normal(ks[7], (h, head_size), jnp.float32) * 0.1),
+        "ln_w": jnp.zeros((h, head_size), dtype),   # per-head groupnorm
+        "ln_b": jnp.zeros((h, head_size), dtype),
+        "w_cr": mk(ks[8], (d, d)), "w_ck": mk(ks[9], (d, d_ff)),
+        "w_cv": mk(jax.random.fold_in(key, 99), (d_ff, d)),
+    }
+    for name in ("r", "k", "v", "g", "w"):
+        p[f"mu_{name}"] = jnp.full((d,), 0.5, dtype)
+    p["mu_cr"] = jnp.full((d,), 0.5, dtype)
+    p["mu_ck"] = jnp.full((d,), 0.5, dtype)
+    return p

@@ -1,0 +1,104 @@
+"""AdamW from scratch (no optax in this environment).
+
+Mixed-precision production layout: bf16 model params + fp32 master copy,
+m, v in the optimizer state (ZeRO-3 falls out of sharding the state like
+the params). Global-norm clipping + linear-warmup/cosine schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    master: Any   # fp32 params
+    m: Any        # fp32 first moment
+    v: Any        # fp32 second moment
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / max(1, cfg.warmup_steps)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> OptState:
+    f32 = lambda p: jax.tree.map(lambda x: x.astype(jnp.float32), p)
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return OptState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                    m=zeros(params), v=zeros(params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-D params."""
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return not any(t in name for t in ("ln", "norm", "bias", "b_", "mu_",
+                                       "lam", "w0", "u"))
+
+
+def update(cfg: AdamWConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, metrics).
+
+    ``params`` supplies per-leaf dtypes (bf16 weights, fp32 router/decay
+    leaves stay fp32).
+    """
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p
+        return p - lr * delta, m_new, v_new
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, g, m, v, p: upd(path, g, m, v, p),
+        grads, state.m, state.v, state.master)
+    # unzip the (p, m, v) triples
+    new_master = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda ref, x: x.astype(ref.dtype),
+                              params, new_master)
+    new_state = OptState(step=step, master=new_master, m=new_m, v=new_v)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,5 @@
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze_cell,
+                       model_flops, save_roofline)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "analyze_cell",
+           "model_flops", "save_roofline"]

@@ -1,0 +1,90 @@
+"""Capture real access streams from model execution for MITHRIL mining.
+
+The paper mines block-I/O streams; the serving adaptation mines whatever
+stream the tiered resource produces. Two capturers:
+
+* ``capture_expert_trace`` — run a (reduced) MoE model over token batches
+  and record the router's top-k expert choices per layer as a stream of
+  (layer, expert) "block ids". Multi-tenant inference interleaves these
+  streams exactly like the paper's multi-application block traces; a
+  MITHRIL layer in front of an expert-weight cache (offloaded experts)
+  prefetches co-activated experts. Used by benchmarks/expert_prefetch.py.
+
+* ``capture_page_trace`` — synthesize the KV-page access stream of a
+  multi-tenant paged decode schedule (request -> its pages), the input to
+  cache/tiered.py.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import router_topk
+
+
+def expert_block_id(layer: int, expert: int, n_experts: int) -> int:
+    return layer * n_experts + expert
+
+
+def capture_expert_trace(cfg: ModelConfig, params, token_batches,
+                         interleave: int = 4, seed: int = 0) -> np.ndarray:
+    """Run the model's routers over batches; emit the expert access stream.
+
+    ``interleave`` emulates multi-tenant serving: the per-batch streams
+    are round-robin interleaved (the sporadic-association regime).
+    Only router projections run (cheap), via the real per-layer weights.
+    """
+    streams: List[List[int]] = []
+    n_groups = len(params["blocks"])
+    for bi, tokens in enumerate(token_batches):
+        x = params["embed"][tokens]                     # (B, S, d)
+        flat = x.reshape(-1, x.shape[-1])
+        stream: List[int] = []
+        layer = 0
+        for gi in range(n_groups):
+            gp = params["blocks"][gi]
+            for uname, up in gp.items():
+                if "mlp" not in up or "router" not in up["mlp"]:
+                    layer += up["ln1"].shape[0] if hasattr(
+                        up.get("ln1", None), "shape") else 1
+                    continue
+                routers = up["mlp"]["router"]          # (reps, d, E)
+                for r in range(routers.shape[0]):
+                    logits = jnp.einsum("td,de->te", flat, routers[r])
+                    _, idx = router_topk(logits, cfg.top_k)
+                    for row in np.asarray(idx)[:: max(1, len(idx) // 64)]:
+                        for e in row:
+                            stream.append(
+                                expert_block_id(layer + r, int(e),
+                                                cfg.n_experts))
+                layer += routers.shape[0]
+        streams.append(stream)
+
+    rng = np.random.default_rng(seed)
+    cursors = [0] * len(streams)
+    out: List[int] = []
+    while any(c < len(s) for c, s in zip(cursors, streams)):
+        si = int(rng.integers(len(streams)))
+        c = cursors[si]
+        if c < len(streams[si]):
+            out.extend(streams[si][c: c + interleave])
+            cursors[si] = c + interleave
+    return np.asarray(out, np.int32)
+
+
+def capture_page_trace(n_requests: int, pages_per_req: int, rounds: int,
+                       n_pages: int, seed: int = 0) -> np.ndarray:
+    """KV-page access stream of a randomized multi-tenant decode schedule."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.choice(n_pages, pages_per_req, replace=False)
+            for _ in range(n_requests)]
+    out: List[int] = []
+    for _ in range(rounds):
+        for r in rng.permutation(n_requests):
+            out.extend(int(p) for p in reqs[r])
+    return np.asarray(out, np.int32)

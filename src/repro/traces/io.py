@@ -1,0 +1,32 @@
+"""Trace persistence + basic workload statistics."""
+
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+import numpy as np
+
+
+def save_traces(path: str, traces: Dict[str, np.ndarray]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **{k: v.astype(np.int32) for k, v in traces.items()})
+
+
+def load_traces(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def workload_stats(trace: np.ndarray) -> Dict[str, float]:
+    uniq, counts = np.unique(trace, return_counts=True)
+    seq_frac = float(np.mean(np.diff(trace.astype(np.int64)) == 1))
+    return {
+        "requests": int(len(trace)),
+        "unique_blocks": int(len(uniq)),
+        "cold_miss_ratio": len(uniq) / max(1, len(trace)),
+        "sequential_fraction": seq_frac,
+        "mean_freq": float(counts.mean()),
+        "p99_freq": float(np.percentile(counts, 99)),
+        "mid_freq_blocks": int(np.sum((counts >= 2) & (counts <= 16))),
+    }

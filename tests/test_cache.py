@@ -1,0 +1,104 @@
+"""Cache substrate: policies vs oracles + hypothesis invariants."""
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import base
+from repro.cache.base import PF_MITHRIL, PF_NONE
+
+
+def py_lru(trace, capacity):
+    """Exact fully-associative LRU hit count."""
+    cache = OrderedDict()
+    hits = 0
+    for b in trace:
+        if b in cache:
+            hits += 1
+            cache.move_to_end(b)
+        else:
+            cache[b] = True
+            if len(cache) > capacity:
+                cache.popitem(last=False)
+    return hits / len(trace)
+
+
+def run_cache(trace, capacity, ways=16, policy="lru"):
+    stt = base.init_cache(capacity, ways)
+    acc = jax.jit(lambda s, b: base.access(s, b, policy))
+    hits = 0
+    for b in trace:
+        stt, hit, _, _ = acc(stt, jnp.int32(b))
+        hits += int(hit)
+    return hits / len(trace), stt
+
+
+class TestLru:
+    def test_matches_exact_lru_closely(self, rng):
+        trace = rng.zipf(1.2, 3000) % 2000
+        hr_exact = py_lru(trace.tolist(), 256)
+        hr_sa, _ = run_cache(trace, 256)
+        assert abs(hr_exact - hr_sa) < 0.05   # set-assoc approximation
+
+    def test_recency_order(self):
+        # capacity 16x1 bucket -> fully associative within one bucket...
+        # use behavioral check: re-accessed block survives
+        trace = [1, 2, 3, 1, 4, 5, 6, 7, 8, 1]
+        hr, _ = run_cache(trace, 16)
+        assert hr >= 2 / len(trace)
+
+
+class TestPrefetchBookkeeping:
+    def test_prefetch_insert_and_use(self):
+        stt = base.init_cache(64)
+        stt, issued, _ = base.insert_prefetch(
+            stt, jnp.int32(42), jnp.int32(PF_MITHRIL), jnp.array(True))
+        assert bool(issued)
+        # duplicate insert is a no-op
+        stt, issued2, _ = base.insert_prefetch(
+            stt, jnp.int32(42), jnp.int32(PF_MITHRIL), jnp.array(True))
+        assert not bool(issued2)
+        stt, hit, used_src, _ = base.access(stt, jnp.int32(42))
+        assert bool(hit) and int(used_src) == PF_MITHRIL
+        # second access: no longer counted as prefetch-use
+        stt, hit, used_src, _ = base.access(stt, jnp.int32(42))
+        assert bool(hit) and int(used_src) == PF_NONE
+
+    def test_second_chance(self):
+        """An unused prefetched block survives one eviction round."""
+        stt = base.init_cache(4, ways=4)   # single bucket of 4
+        stt, _, _ = base.insert_prefetch(
+            stt, jnp.int32(1000), jnp.int32(PF_MITHRIL), jnp.array(True))
+        for b in range(4):                  # fill + overflow the bucket
+            stt, _, _, _ = base.access(stt, jnp.int32(b))
+        assert bool(base.contains(stt, jnp.int32(1000)))  # second chance
+        for b in range(4, 12):
+            stt, _, _, _ = base.access(stt, jnp.int32(b))
+        assert not bool(base.contains(stt, jnp.int32(1000)))  # now gone
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=100))
+def test_capacity_never_exceeded(trace):
+    stt = base.init_cache(16, ways=4)
+    acc = jax.jit(lambda s, b: base.access(s, b, "lru"))
+    for b in trace:
+        stt, _, _, _ = acc(stt, jnp.int32(b))
+    assert int(np.sum(np.asarray(stt.key) != -1)) <= 16
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=2, max_size=100))
+def test_hit_iff_previously_inserted_and_not_evicted(trace):
+    """A hit implies the block was accessed before (no phantom hits)."""
+    stt = base.init_cache(16, ways=4)
+    acc = jax.jit(lambda s, b: base.access(s, b, "lru"))
+    seen = set()
+    for b in trace:
+        stt, hit, _, _ = acc(stt, jnp.int32(b))
+        if bool(hit):
+            assert b in seen
+        seen.add(b)

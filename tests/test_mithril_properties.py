@@ -1,0 +1,82 @@
+"""Hypothesis property tests on MITHRIL invariants."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EMPTY, MithrilConfig, init, lookup, mine, record
+from repro.core.hashindex import bucket_of
+
+CFG = MithrilConfig(min_support=2, max_support=4, lookahead=8,
+                    rec_buckets=32, rec_ways=4, mine_rows=8,
+                    pf_buckets=32, pf_ways=4)
+_REC = jax.jit(functools.partial(record, CFG))
+
+
+def run(blocks):
+    stt = init(CFG)
+    for b in blocks:
+        stt = _REC(stt, jnp.int32(b))
+    return stt
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=120))
+def test_determinism(blocks):
+    a = run(blocks)
+    b = run(blocks)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=120))
+def test_invariants(blocks):
+    stt = run(blocks)
+    # mining table fill within bounds; full table impossible post-trigger
+    assert 0 <= int(stt.mine_fill) < CFG.mine_rows
+    # every live recording entry has 1 <= cnt <= R while loc==0
+    key = np.asarray(stt.rec_key)
+    cnt = np.asarray(stt.rec_cnt)
+    loc = np.asarray(stt.rec_loc)
+    live = (key != EMPTY) & (loc == 0)
+    assert np.all(cnt[live] >= 1) and np.all(cnt[live] <= CFG.min_support)
+    # hash-placement invariant: every key sits in its own bucket
+    nb = CFG.rec_buckets
+    for b in range(nb):
+        for w in range(CFG.rec_ways):
+            if key[b, w] != EMPTY:
+                assert int(bucket_of(jnp.int32(key[b, w]), nb)) == b
+    # ts advanced exactly once per record event
+    assert int(stt.ts) == len(blocks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_planted_association_found(reps, noise_base):
+    """A consecutive pair repeated r times: mined iff R <= r <= S; beyond
+    S the paper's frequent-block rule kicks the pair out (Sec. 4.2)."""
+    a, b = 7, 9
+    reps = max(reps, CFG.min_support)
+    blocks = []
+    for r in range(reps):
+        blocks += [a, b, noise_base + 2000 + r]
+    stt = mine(CFG, run(blocks))
+    cand = [int(c) for c in lookup(CFG, stt, jnp.int32(a))]
+    if reps <= CFG.max_support:
+        assert b in cand
+    else:
+        assert b not in cand      # frequent-block exclusion
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=60))
+def test_mine_idempotent_on_clean_state(blocks):
+    stt = mine(CFG, run(blocks))
+    st2 = mine(CFG, stt)
+    # mining a cleared table discovers nothing new
+    assert int(st2.n_pairs) == int(stt.n_pairs)
+    assert int(st2.mine_fill) == 0

@@ -1,0 +1,173 @@
+"""Model substrate: per-arch smoke + numerics cross-checks."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import (decode_step, forward_train, init_params, prefill)
+from repro.models.attention import (decode_attention, flash_attention,
+                                    full_attention)
+from repro.models.rglru import (init_rg_state, init_rglru_params,
+                                rglru_block, rglru_decode)
+from repro.models.rwkv6 import (_wkv_chunked, _wkv_sequential)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 64
+
+
+def make_batch(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend == "vision_stub":
+        batch = {"tokens": tokens[:, : S - cfg.n_patches],
+                 "patches": jnp.ones((B, cfg.n_patches, cfg.d_model),
+                                     jnp.bfloat16),
+                 "labels": tokens}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke(arch):
+    """Reduced config: one train step's loss is finite, shapes correct,
+    prefill+decode runs."""
+    cfg = reduced_config(ARCHS[arch])
+    params = init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(
+        lambda p, b: forward_train(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss))
+    logits, cache = jax.jit(lambda p, b: prefill(cfg, p, b))(params, batch)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    lg, cache2 = jax.jit(
+        lambda p, c, t, q: decode_step(cfg, p, c, t, q))(params, cache, tok,
+                                                         pos)
+    assert lg.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-1.6b",
+                                  "recurrentgemma-9b", "mixtral-8x7b",
+                                  "qwen2-moe-a2.7b", "whisper-medium"])
+def test_decode_matches_forward(arch):
+    """prefill(x[:t]) + decode(x[t]) logits == forward(x[:t+1]) last logits.
+
+    MoE archs use a dropless capacity factor at test scale (dropping MoEs
+    are not decode-consistent by construction)."""
+    cfg = reduced_config(ARCHS[arch])
+    params = init_params(cfg, KEY)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (1, S + 1), 0,
+                                cfg.vocab)
+    batch = {"tokens": tokens[:, :S]}
+    full_batch = {"tokens": tokens, "labels": tokens}
+    if cfg.is_encoder_decoder:
+        frames = jnp.ones((1, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        batch["frames"] = frames
+        full_batch["frames"] = frames
+    _, cache = prefill(cfg, params, batch, pad_to=S + 8)
+    lg_dec, _ = decode_step(cfg, params, cache, tokens[:, S],
+                            jnp.array([S], jnp.int32))
+    from repro.models.lm import (RunFlags, _encode, _input_embeds, _norm,
+                                 _positions_for, _project_cross,
+                                 _run_groups, logits_fn)
+    positions = _positions_for(cfg, full_batch)
+    cross = None
+    if cfg.is_encoder_decoder:
+        enc = _encode(cfg, params, frames, RunFlags(remat="none"))
+        cross = _project_cross(cfg, params, enc)
+    x = _input_embeds(cfg, params, full_batch, positions)
+    x, _, _ = _run_groups(cfg, params, x, positions, "train", None, cross,
+                          RunFlags(remat="none"))
+    x = _norm(cfg, params["final_norm"], x)
+    lg_fwd = logits_fn(cfg, params, x)[:, -1]
+    np.testing.assert_allclose(np.asarray(lg_dec, np.float32),
+                               np.asarray(lg_fwd, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 48),
+                                               (False, 0)])
+    def test_fwd_bwd_vs_full(self, causal, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 128, 8, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (2, 128, 4, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (2, 128, 4, 32), jnp.float32)
+        f = lambda *a: flash_attention(*a, causal=causal, window=window,
+                                       block_q=32, block_k=32).sum()
+        g = lambda *a: full_attention(*a, causal=causal, window=window).sum()
+        np.testing.assert_allclose(
+            np.asarray(flash_attention(q, k, v, causal=causal, window=window,
+                                       block_q=32, block_k=32)),
+            np.asarray(full_attention(q, k, v, causal=causal,
+                                      window=window)),
+            rtol=2e-4, atol=2e-4)
+        for a, b in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                        jax.grad(g, (0, 1, 2))(q, k, v)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-3)
+
+    def test_decode_attention_vs_full(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, 1, 8, 32), jnp.float32)
+        kc = jax.random.normal(ks[1], (2, 64, 4, 32), jnp.float32)
+        vc = jax.random.normal(ks[2], (2, 64, 4, 32), jnp.float32)
+        lengths = jnp.array([40, 64], jnp.int32)
+        got = decode_attention(q, kc, vc, lengths)
+        for b in range(2):
+            L = int(lengths[b])
+            want = full_attention(q[b:b+1], kc[b:b+1, :L], vc[b:b+1, :L],
+                                  causal=False)
+            np.testing.assert_allclose(np.asarray(got[b], np.float32),
+                                       np.asarray(want[0], np.float32),
+                                       rtol=2e-4, atol=2e-4)
+
+
+class TestRecurrent:
+    def test_rwkv_chunked_vs_sequential(self):
+        b, s, h, hd = 2, 64, 4, 16
+        ks = jax.random.split(KEY, 5)
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd))) * 0.5 + 0.45
+        u = jax.random.normal(ks[4], (h, hd)) * 0.1
+        s0 = jnp.zeros((b, h, hd, hd))
+        oc, sc = _wkv_chunked(r, k, v, w.astype(jnp.float32), u, s0)
+        os_, ss = _wkv_sequential(r, k, v, w.astype(jnp.float32), u, s0)
+        np.testing.assert_allclose(np.asarray(oc), np.asarray(os_),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(ss),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_rglru_scan_vs_stepwise(self):
+        d = 32
+        p = init_rglru_params(KEY, d)
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, d), jnp.float32
+                              ).astype(jnp.bfloat16)
+        st = init_rg_state(1, d)
+        y_full, st_full = rglru_block(p, x, st)
+        st2 = init_rg_state(1, d)
+        ys = []
+        for t in range(16):
+            y, st2 = rglru_decode(p, x[:, t:t+1], st2)
+            ys.append(y)
+        y_step = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                                   np.asarray(y_step, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+        np.testing.assert_allclose(np.asarray(st_full.h),
+                                   np.asarray(st2.h), rtol=1e-3, atol=1e-3)
+
+
+def test_param_count_sane():
+    for arch, cfg in ARCHS.items():
+        n = cfg.param_count()
+        assert n > 1e8, (arch, n)

@@ -1,0 +1,76 @@
+"""AMP and PG prefetcher behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.amp import AmpConfig, amp_access, amp_feedback_used, init_amp
+from repro.cache.pg import PgConfig, init_pg, pg_access
+from repro.core.hashindex import EMPTY
+
+
+class TestAmp:
+    def test_detects_sequential_stream(self):
+        cfg = AmpConfig()
+        st = init_amp(cfg)
+        vec = None
+        for b in range(100, 108):
+            st, vec = amp_access(cfg, st, jnp.int32(b))
+        got = [int(x) for x in vec if int(x) != EMPTY]
+        assert got and all(g > 107 for g in got)
+
+    def test_interleaved_streams_both_detected(self):
+        cfg = AmpConfig()
+        st = init_amp(cfg)
+        issued = {1: 0, 2: 0}
+        for i in range(12):
+            for base, sid in ((1000, 1), (5000, 2)):
+                st, vec = amp_access(cfg, st, jnp.int32(base + i))
+                issued[sid] += sum(1 for x in vec if int(x) != EMPTY)
+        assert issued[1] > 0 and issued[2] > 0
+
+    def test_degree_adapts_up(self):
+        cfg = AmpConfig(init_degree=2, max_degree=8)
+        st = init_amp(cfg)
+        for b in range(100, 105):
+            st, _ = amp_access(cfg, st, jnp.int32(b))
+        d0 = int(jnp.max(st.deg))
+        for b in range(105, 112):
+            st = amp_feedback_used(cfg, st, jnp.int32(b), jnp.array(True))
+            st, _ = amp_access(cfg, st, jnp.int32(b))
+        assert int(jnp.max(st.deg)) > d0
+
+    def test_random_stream_no_prefetch(self, rng):
+        cfg = AmpConfig()
+        st = init_amp(cfg)
+        n = 0
+        for b in rng.choice(10**6, 50, replace=False):
+            st, vec = amp_access(cfg, st, jnp.int32(int(b)))
+            n += sum(1 for x in vec if int(x) != EMPTY)
+        assert n == 0
+
+
+class TestPg:
+    def test_discovers_successor(self):
+        cfg = PgConfig(window=2, buckets=64, min_chance_num=1,
+                       min_chance_den=4)
+        st = init_pg(cfg)
+        cands = None
+        for _ in range(6):
+            for b in (5, 9, 1234):
+                st, cands_ = pg_access(cfg, st, jnp.int32(b))
+                if b == 5:
+                    cands = cands_
+        got = [int(x) for x in cands if int(x) != EMPTY]
+        assert 9 in got
+
+    def test_low_probability_edge_filtered(self):
+        cfg = PgConfig(window=1, buckets=64, min_chance_num=1,
+                       min_chance_den=2)   # needs >= 50% co-occurrence
+        st = init_pg(cfg)
+        # 5 followed by a DIFFERENT block each time: each edge has prob 1/n
+        for i in range(8):
+            st, _ = pg_access(cfg, st, jnp.int32(5))
+            st, _ = pg_access(cfg, st, jnp.int32(100 + i))
+        st, cands = pg_access(cfg, st, jnp.int32(5))
+        assert all(int(x) == EMPTY for x in cands)

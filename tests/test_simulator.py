@@ -1,0 +1,60 @@
+"""Composable trace simulator: the paper's layering claims at small scale."""
+
+import numpy as np
+import pytest
+
+from repro.cache import SimConfig, max_hit_ratio, simulate
+from repro.cache.base import PF_MITHRIL
+from repro.configs.mithril_paper import SUITE_MITHRIL
+from repro.traces import association_groups, mixed
+
+
+@pytest.fixture(scope="module")
+def assoc_trace():
+    return mixed(8000, w_seq=0.1, w_assoc=0.7, w_zipf=0.2, seed=42)
+
+
+def test_mithril_beats_lru_on_associations(assoc_trace):
+    lru = simulate(SimConfig(capacity=256), assoc_trace)
+    mith = simulate(SimConfig(capacity=256, use_mithril=True,
+                              mithril=SUITE_MITHRIL), assoc_trace)
+    assert mith.hit_ratio > lru.hit_ratio * 1.15
+
+
+def test_mithril_amp_at_least_amp(assoc_trace):
+    amp = simulate(SimConfig(capacity=256, use_amp=True), assoc_trace)
+    both = simulate(SimConfig(capacity=256, use_amp=True, use_mithril=True,
+                              mithril=SUITE_MITHRIL), assoc_trace)
+    assert both.hit_ratio >= amp.hit_ratio - 0.02   # paper Fig 4 right
+
+
+def test_mithril_fifo_close_to_mithril_lru(assoc_trace):
+    f = simulate(SimConfig(capacity=256, policy="fifo", use_mithril=True,
+                           mithril=SUITE_MITHRIL), assoc_trace)
+    l = simulate(SimConfig(capacity=256, policy="lru", use_mithril=True,
+                           mithril=SUITE_MITHRIL), assoc_trace)
+    assert f.hit_ratio > 0.8 * l.hit_ratio          # paper Sec 5.2
+
+
+def test_precision_accounting(assoc_trace):
+    res = simulate(SimConfig(capacity=256, use_mithril=True,
+                             mithril=SUITE_MITHRIL), assoc_trace)
+    issued = int(res.stats.pf_issued[PF_MITHRIL])
+    used = int(res.stats.pf_used[PF_MITHRIL])
+    assert issued > 0 and 0 <= used <= issued
+
+
+def test_hit_ratio_bounded_by_max(assoc_trace):
+    res = simulate(SimConfig(capacity=256, use_mithril=True,
+                             mithril=SUITE_MITHRIL), assoc_trace)
+    assert res.hit_ratio <= max_hit_ratio(assoc_trace) + 1e-9
+
+
+def test_hit_curve_warmup():
+    """Paper Sec 5.5: MITHRIL needs warm-up before benefits appear."""
+    tr = association_groups(6000, n_groups=100, group_size=4, reuse=10,
+                            seed=3)
+    res = simulate(SimConfig(capacity=128, use_mithril=True,
+                             mithril=SUITE_MITHRIL), tr)
+    first, last = res.hit_curve[:1000].mean(), res.hit_curve[-1000:].mean()
+    assert last > first
