@@ -3,9 +3,12 @@
 The paper keeps hashmaps from block address to table rows. Under jit we
 need fixed shapes and O(1) vectorizable probes, so every map here is a
 W-way set-associative array: ``bucket = mix(key) & (n_buckets - 1)``,
-then a W-wide compare. Replacement within a bucket is FIFO by insertion
-age, matching the paper's "replace the oldest entry" rule for the
-recording table and the FIFO shard replacement of the prefetching table.
+then a W-wide compare. ``choose_victim`` evicts the smallest-age way;
+what "age" means is the caller's policy: the recording table stamps
+insertion time only (the paper's FIFO "replace the oldest entry" rule),
+while the prefetching table also refreshes the stamp on every
+existing-source update (mithril.add_association), i.e. LRU-by-touch —
+otherwise the hottest sources would be evicted first.
 
 Keys are int32 block ids; EMPTY = -1. All functions are pure.
 """

@@ -57,7 +57,11 @@ def add_association(cfg: MithrilConfig, state: MithrilState,
             vals = s.pf_vals.at[b, way, pos].set(
                 jnp.where(already, s.pf_vals[b, way, pos], dst))
             cnt = s.pf_cnt.at[b, way].add(jnp.where(already, 0, 1))
-            return s._replace(pf_vals=vals, pf_cnt=cnt,
+            # touch the entry age: a re-mined source is hot, and without
+            # the refresh choose_victim evicts exactly the hottest sources
+            # first (they have the oldest insertion timestamps)
+            age = s.pf_age.at[b, way].set(s.ts)
+            return s._replace(pf_vals=vals, pf_cnt=cnt, pf_age=age,
                               n_pairs=s.n_pairs + jnp.where(already, 0, 1))
 
         def insert_new(s: MithrilState) -> MithrilState:

@@ -1,0 +1,16 @@
+"""Distributed execution layer: sharding rules, logical-axis contexts,
+and explicit expert-parallel MoE (DESIGN.md §4).
+
+``dist`` sits below launch/ (which owns meshes and jitted steps) and
+above models/ (which only speaks logical axes via ``ctx.constrain``).
+Importing it never touches jax device state.
+"""
+
+from . import sharding
+from .ctx import ShardingCtx, constrain, current, resolve, sharding_ctx
+from .moe_ep import moe_ffn_ep, moe_ffn_tp
+
+__all__ = [
+    "sharding", "ShardingCtx", "constrain", "current", "resolve",
+    "sharding_ctx", "moe_ffn_ep", "moe_ffn_tp",
+]

@@ -1,0 +1,114 @@
+"""Logical-axis sharding context (DESIGN.md §4).
+
+Model code never names mesh axes. It annotates activations with LOGICAL
+axes — "dp" (batch), "tp" (the tensor/sequence axis), or ``None`` — and
+``constrain`` resolves them against the active :func:`sharding_ctx`:
+
+    with sharding_ctx(mesh, dp_axes=("pod", "data"), tp_axis="model"):
+        ...  # trace/jit model code; constrain() emits real constraints
+
+Outside a context ``constrain`` is the identity, so single-device tests,
+``examples/quickstart.py`` and plain ``jax.jit`` runs execute the exact
+same model code with zero SPMD machinery. A logical axis whose mesh-axis
+product does not divide the array dim resolves to ``None`` (dropped)
+rather than erroring — the same divisibility contract as dist/sharding.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class ShardingCtx:
+    """Immutable resolution environment for logical axes."""
+
+    __slots__ = ("mesh", "dp_axes", "tp_axis")
+
+    def __init__(self, mesh, dp_axes: Tuple[str, ...], tp_axis: str):
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
+        self.tp_axis = tp_axis
+
+    def axis_sizes(self):
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def logical_sizes(self):
+        sizes = self.axis_sizes()
+        dp = int(np.prod([sizes.get(a, 1) for a in self.dp_axes],
+                         dtype=np.int64)) if self.dp_axes else 1
+        return {"dp": dp, "tp": sizes.get(self.tp_axis, 1)}
+
+
+_local = threading.local()
+
+
+def _stack():
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+def current() -> Optional[ShardingCtx]:
+    """The innermost active context, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def sharding_ctx(mesh, *, dp_axes: Optional[Sequence[str]] = None,
+                 tp_axis: str = "model"):
+    """Activate a logical-axis resolution context for the enclosed trace."""
+    if dp_axes is None:
+        dp_axes = tuple(a for a in mesh.axis_names if a != tp_axis)
+    ctx = ShardingCtx(mesh, tuple(dp_axes), tp_axis)
+    _stack().append(ctx)
+    try:
+        yield ctx
+    finally:
+        _stack().pop()
+
+
+def resolve(ctx: ShardingCtx, shape: Tuple[int, ...],
+            axes: Sequence[Optional[str]]) -> P:
+    """Logical axes -> PartitionSpec under ``ctx`` (divisibility-gated)."""
+    sizes = ctx.axis_sizes()
+    out: list = []
+    for dim, a in zip(shape, axes):
+        if a is None:
+            out.append(None)
+            continue
+        if a == "dp":
+            names: Tuple[str, ...] = ctx.dp_axes
+        elif a == "tp":
+            names = (ctx.tp_axis,)
+        else:                      # explicit mesh axis name passes through
+            names = (a,)
+        if not names or any(n not in sizes for n in names):
+            out.append(None)
+            continue
+        prod = int(np.prod([sizes[n] for n in names], dtype=np.int64))
+        if prod and dim % prod == 0:
+            out.append(names[0] if len(names) == 1 else names)
+        else:
+            out.append(None)       # auto-drop: dim does not divide
+    return P(*out)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """``lax.with_sharding_constraint`` via logical axes; identity when no
+    context is active (single-device / unit-test paths)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"constrain: {len(axes)} logical axes for rank-"
+                         f"{x.ndim} array {x.shape}")
+    spec = resolve(ctx, tuple(x.shape), axes)
+    return lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

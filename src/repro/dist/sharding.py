@@ -1,0 +1,182 @@
+"""Divisibility-aware auto-sharding rules for every runtime pytree.
+
+One rule set drives training, serving, dry-run and elastic resume:
+
+    param_specs(params, mesh, strategy)  -> PartitionSpec pytree
+    opt_specs(opt_state, pspec, mesh)    -> ZeRO-3 optimizer shardings
+    batch_specs(batch, mesh)             -> dp-sharded input batches
+    cache_specs(cache, mesh)             -> decode KV-cache shardings
+    to_named(specs, mesh)                -> NamedSharding pytree
+
+Conventions (DESIGN.md §4):
+
+* every spec is FULL RANK (one entry per array dim) so callers can slice
+  specs positionally (the roofline probes strip the layer-stack dim);
+* the leading axis of any leaf under a "blocks"/"enc_blocks" subtree is
+  the scanned layer stack and is never sharded;
+* an axis is sharded only when its size divides the mesh-axis product —
+  elastic resume onto a smaller/larger mesh recomputes the rules and the
+  non-dividing shardings drop out instead of erroring;
+* spec construction reads only ``mesh.axis_names`` / ``mesh.devices.shape``
+  so feasibility planning works on mock meshes with no devices attached
+  (checkpoint/elastic.py, tests); only ``to_named`` needs a real Mesh.
+
+Strategies:
+
+* ``fsdp`` (default, alias ``2d``): weights sharded over the data axes on
+  their largest dividing dim (ZeRO-3) plus tensor parallelism over the
+  "model" axis on the minor dim.
+* ``tp`` / ``tp_serve``: "model"-axis sharding only — inference keeps
+  weights resident per TP shard, no per-layer weight all-gathers.
+* ``replicated``: everything replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TP_AXIS = "model"
+
+_STRATEGIES = ("fsdp", "2d", "tp", "tp_serve", "replicated")
+
+
+# ---------------------------------------------------------------------------
+# mesh introspection (duck-typed: axis_names + devices.shape only)
+# ---------------------------------------------------------------------------
+
+def axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    """Every mesh axis except the tensor-parallel one ("pod", "data", ...)."""
+    return tuple(a for a in mesh.axis_names if a != TP_AXIS)
+
+
+def _prod(sizes: Dict[str, int], axes: Sequence[str]) -> int:
+    return int(np.prod([sizes[a] for a in axes], dtype=np.int64)) if axes else 1
+
+
+def _dp_entry(dp: Tuple[str, ...]):
+    """PartitionSpec entry for the (possibly multi-axis) data dimension."""
+    return dp[0] if len(dp) == 1 else dp
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _is_stacked(path) -> bool:
+    return any(getattr(k, "key", None) in ("blocks", "enc_blocks")
+               for k in path)
+
+
+def _leaf_spec(shape: Tuple[int, ...], stacked: bool, strategy: str,
+               dp: Tuple[str, ...], dp_prod: int,
+               tp_size: int, has_tp: bool) -> P:
+    nd = len(shape)
+    spec: list = [None] * nd
+    lo = 1 if stacked else 0          # never shard the layer-stack dim
+    if strategy == "replicated" or nd - lo < 2:
+        return P(*spec)               # scalars/vectors/norms replicate
+    tp_dim = None
+    if has_tp and strategy in ("fsdp", "2d", "tp", "tp_serve"):
+        for i in (nd - 1, nd - 2):    # prefer the minor (output) dim
+            if i >= lo and shape[i] % tp_size == 0:
+                tp_dim = i
+                spec[i] = TP_AXIS
+                break
+    if dp and strategy in ("fsdp", "2d"):
+        cands = [i for i in range(lo, nd)
+                 if i != tp_dim and shape[i] % dp_prod == 0]
+        if cands:
+            j = max(cands, key=lambda i: shape[i])
+            spec[j] = _dp_entry(dp)
+    return P(*spec)
+
+
+def param_specs(params, mesh, strategy: str = "fsdp"):
+    """PartitionSpec pytree mirroring ``params`` (arrays or SDS leaves)."""
+    if strategy not in _STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {_STRATEGIES}")
+    sizes = axis_sizes(mesh)
+    dp = dp_axes_of(mesh)
+    dp_prod = _prod(sizes, dp)
+    tp_size = sizes.get(TP_AXIS, 1)
+    has_tp = TP_AXIS in sizes
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _leaf_spec(tuple(x.shape), _is_stacked(path),
+                                   strategy, dp, dp_prod, tp_size, has_tp),
+        params)
+
+
+def opt_specs(opt_state, pspec, mesh):
+    """ZeRO-3 optimizer shardings: master/m/v follow the param specs
+    exactly (optim/adamw.py keeps them params-shaped), step replicates."""
+    from repro.optim.adamw import OptState
+    if isinstance(opt_state, OptState):
+        return OptState(step=P(), master=pspec, m=pspec, v=pspec)
+    # generic state pytree: params-shaped subtrees were already handled by
+    # the caller passing the matching pspec; replicate everything else
+    return jax.tree.map(lambda x: P(*([None] * getattr(x, "ndim", 0))),
+                        opt_state)
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch, mesh):
+    """Inputs shard their leading (global-batch) dim over the data axes."""
+    sizes = axis_sizes(mesh)
+    dp = dp_axes_of(mesh)
+    dp_prod = _prod(sizes, dp)
+
+    def leaf(x) -> P:
+        shape = tuple(x.shape)
+        spec: list = [None] * len(shape)
+        if shape and dp and shape[0] % dp_prod == 0:
+            spec[0] = _dp_entry(dp)
+        return P(*spec)
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(cache, mesh):
+    """Decode KV caches: leaves are (layer_stack, batch, ...); batch
+    shards over the data axes and K/V head dims over "model" (TP serving
+    keeps each head's pages resident on its shard)."""
+    sizes = axis_sizes(mesh)
+    dp = dp_axes_of(mesh)
+    dp_prod = _prod(sizes, dp)
+    tp_size = sizes.get(TP_AXIS, 1)
+    has_tp = TP_AXIS in sizes
+
+    def leaf(path, x) -> P:
+        shape = tuple(x.shape)
+        nd = len(shape)
+        spec: list = [None] * nd
+        if nd >= 2 and dp and shape[1] % dp_prod == 0:
+            spec[1] = _dp_entry(dp)
+        is_kv = getattr(path[-1], "key", None) in ("k", "v")
+        # (stack, B, S, H, hd): shard the kv-head dim
+        if is_kv and nd >= 4 and has_tp and shape[nd - 2] % tp_size == 0:
+            spec[nd - 2] = TP_AXIS
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+def to_named(specs, mesh):
+    """Map a PartitionSpec pytree to NamedShardings on a REAL mesh."""
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                        is_leaf=lambda x: isinstance(x, P))

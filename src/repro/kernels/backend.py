@@ -1,0 +1,24 @@
+"""Backend detection for the Pallas kernels.
+
+The kernels target TPU (DESIGN.md §2) and must compile there; every
+other backend (the CPU CI container, GPU dev boxes) runs them in
+interpreter mode. ``interpret=None`` anywhere in this package means
+"resolve from ``jax.default_backend()`` at trace time".
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve an interpret flag: compiled on TPU, interpreted elsewhere."""
+    if interpret is None:
+        return not on_tpu()
+    return interpret

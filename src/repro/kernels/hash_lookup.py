@@ -10,10 +10,13 @@ are small (<=256KB) and live fully in VMEM; queries are tiled by the grid.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import default_interpret
 
 
 def _mix32(k):
@@ -44,9 +47,11 @@ def _lookup_kernel(q_ref, keys_ref, vals_ref, out_ref, *, blk: int,
 
 def hash_lookup_kernel(queries: jax.Array, pf_key: jax.Array,
                        pf_vals: jax.Array, *, blk: int = 256,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """queries: (Q,) int32; pf_key: (NB, W); pf_vals: (NB, W, P).
-    Returns (Q, P) prefetch candidates (-1 = none)."""
+    Returns (Q, P) prefetch candidates (-1 = none).
+    ``interpret=None``: compiled on TPU, interpreted elsewhere."""
+    interpret = default_interpret(interpret)
     q = queries.shape[0]
     nb, ways = pf_key.shape
     plist = pf_vals.shape[-1]

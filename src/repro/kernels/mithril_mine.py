@@ -20,10 +20,13 @@ Input rows must be pre-padded with ``window`` trailing invalid rows
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import default_interpret
 
 
 def _mine_kernel(ts_ref, cnt_ref, valid_ref, out_ref, *, delta: int,
@@ -56,11 +59,15 @@ def _mine_kernel(ts_ref, cnt_ref, valid_ref, out_ref, *, delta: int,
 
 def pairwise_codes_kernel(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
                           delta: int, window: int, *, blk: int = 128,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: Optional[bool] = None) -> jax.Array:
     """ts: (N_pad, S) int32 sorted by ts[:,0] and padded with >= window
     invalid rows; cnt/valid: (N_pad, 1) int32. Returns (N, W) codes where
     N = N_pad - window - 1 ... callers slice. See ops.mithril_pairwise.
+
+    ``interpret=None`` resolves from the backend: compiled on TPU,
+    interpreted elsewhere (never silently interpreted on real hardware).
     """
+    interpret = default_interpret(interpret)
     n_pad, s = ts.shape
     n_rows = n_pad - window - 1
     assert n_rows % blk == 0, (n_rows, blk)

@@ -1,6 +1,7 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
+The interpret flag threads from backend detection (kernels/backend.py):
+compiled on TPU, interpreted elsewhere (this container is CPU-only; the
 kernels target TPU — DESIGN.md §2). The wrappers adapt the core data
 layouts (padding, 2-D scalar arrays) to the kernel contracts.
 """
@@ -12,13 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .backend import default_interpret
 from .hash_lookup import hash_lookup_kernel
 from .mithril_mine import pairwise_codes_kernel
 from .paged_decode import paged_decode_kernel
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "window", "blk"))
@@ -40,7 +38,7 @@ def mithril_pairwise(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
     val_p = jnp.zeros((pad_total, 1), jnp.int32).at[:n, 0].set(
         valid.astype(jnp.int32))
     out = pairwise_codes_kernel(ts_p, cnt_p, val_p, delta, window, blk=blk,
-                                interpret=not _on_tpu())
+                                interpret=default_interpret())
     return out[:n]
 
 
@@ -53,7 +51,7 @@ def prefetch_lookup(queries: jax.Array, pf_key: jax.Array,
     qp = ((q + blk - 1) // blk) * blk
     padded = jnp.full((qp,), -1, jnp.int32).at[:q].set(queries)
     out = hash_lookup_kernel(padded, pf_key, pf_vals, blk=min(blk, qp),
-                             interpret=not _on_tpu())
+                             interpret=default_interpret())
     return out[:q]
 
 
@@ -62,4 +60,4 @@ def paged_decode(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                  page_table: jax.Array, lengths: jax.Array) -> jax.Array:
     """Flash-decode over paged KV: (B,Hq,hd) x pools -> (B,Hq,hd)."""
     return paged_decode_kernel(q, k_pool, v_pool, page_table, lengths,
-                               interpret=not _on_tpu())
+                               interpret=default_interpret())

@@ -18,11 +18,14 @@ Design (TPU paged-attention shape):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .backend import default_interpret
 
 NEG_INF = -1e30
 
@@ -87,10 +90,12 @@ def _decode_kernel(ptab_ref, len_ref, q_ref, kpool_ref, vpool_ref, out_ref,
 
 def paged_decode_kernel(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         page_table: jax.Array, lengths: jax.Array, *,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, hd); pools: (NP, page_size, Hkv, hd); page_table:
     (B, n_pages) int32 page ids; lengths: (B,) valid token counts.
-    Returns (B, Hq, hd)."""
+    Returns (B, Hq, hd).
+    ``interpret=None``: compiled on TPU, interpreted elsewhere."""
+    interpret = default_interpret(interpret)
     b, hq, hd = q.shape
     npages_total, page_size, n_kv, _ = k_pool.shape
     n_pages = page_table.shape[1]

@@ -57,6 +57,15 @@ def _tensor_bytes(type_str: str) -> int:
     return total
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Version-portable ``Compiled.cost_analysis()``: older jaxlibs return
+    a one-element list of per-module dicts, newer return the dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def parse_collectives(hlo_text: str):
     """Sum output bytes of every collective op, by kind.
 
@@ -114,7 +123,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, strategy: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     try:
         ma = compiled.memory_analysis()
         mem = {k: int(getattr(ma, k)) for k in

@@ -126,7 +126,8 @@ def _group_probe(cfg: ModelConfig, gi: int, unit, reps, mesh, kind: str,
                  b: int, s: int, strategy: str, max_len: int = 0):
     """Lower+compile the group's unit body standalone; returns its
     cost_analysis dict and collective bytes."""
-    from repro.launch.dryrun import parse_collectives  # local import (XLA flag)
+    from repro.launch.dryrun import (cost_analysis_dict,  # local import
+                                     parse_collectives)  # (XLA flag)
 
     pall = params_sds(cfg)
     gp = pall["blocks"][gi]
@@ -191,7 +192,7 @@ def _group_probe(cfg: ModelConfig, gi: int, unit, reps, mesh, kind: str,
     jfn = jax.jit(wrapped, in_shardings=(psh, xsh, possh, csh))
     with mesh:
         compiled = jfn.lower(p_slice, x_sds, pos_sds, cache_slice).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     coll, _ = parse_collectives(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

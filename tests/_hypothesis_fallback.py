@@ -1,0 +1,88 @@
+"""Minimal fallback for the `hypothesis` API this suite uses.
+
+The CI container does not ship `hypothesis` and nothing may be
+pip-installed there, so tests/conftest.py installs this shim into
+``sys.modules`` ONLY when the real package is absent (when hypothesis is
+installed — e.g. in GitHub CI — it is used untouched).
+
+Covered surface: ``@settings(max_examples=, deadline=)`` stacked on
+``@given(*strategies)``, plus ``st.integers(lo, hi)`` and
+``st.lists(elem, min_size=, max_size=)``. Examples are drawn from a
+per-test deterministic PRNG (seeded from the test's qualified name) so
+runs are reproducible; there is no shrinking — the failing example is in
+the assertion traceback.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 25) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example_from(rnd) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class settings:
+    """Decorator form only (the suite never uses profiles)."""
+
+    def __init__(self, max_examples: int = 100, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._fallback_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples", 100))
+            seed = int.from_bytes(hashlib.sha256(
+                fn.__qualname__.encode()).digest()[:4], "big")
+            rnd = random.Random(seed)
+            for _ in range(n):
+                example = [s.example_from(rnd) for s in strategies]
+                fn(*args, *example, **kwargs)
+        # copy identity WITHOUT functools.wraps: __wrapped__ would make
+        # pytest introspect fn's signature and demand fixtures named
+        # after the strategy parameters
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.lists = lists
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.__is_fallback_shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

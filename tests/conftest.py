@@ -1,6 +1,12 @@
 import numpy as np
 import pytest
 
+try:                    # gate, don't require: the CPU container has no
+    import hypothesis   # noqa: F401 — hypothesis and cannot pip-install
+except ModuleNotFoundError:
+    from _hypothesis_fallback import install
+    install()
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -102,6 +102,29 @@ class TestRecordingSemantics:
         vals = set(int(v) for v in lookup(cfg, st, jnp.int32(5)))
         assert vals == {103, 102}      # 101 replaced FIFO
 
+    def test_existing_source_update_refreshes_age(self):
+        """Updating a live prefetch source must touch pf_age: otherwise
+        the hottest sources keep their insertion timestamp and are the
+        FIRST picked by choose_victim (LRU-stale bugfix)."""
+        from repro.core.hashindex import probe
+        from repro.core.mithril import add_association
+        cfg = small_cfg(prefetch_list=4)
+        st = init(cfg)._replace(ts=jnp.int32(10))
+        st = add_association(cfg, st, jnp.int32(5), jnp.int32(101),
+                             jnp.array(True))
+        b, way, found = probe(st.pf_key, jnp.int32(5), cfg.pf_buckets)
+        assert bool(found) and int(st.pf_age[b, way]) == 10
+        # new-destination update refreshes the age
+        st = st._replace(ts=jnp.int32(20))
+        st = add_association(cfg, st, jnp.int32(5), jnp.int32(102),
+                             jnp.array(True))
+        assert int(st.pf_age[b, way]) == 20
+        # duplicate-destination update is still a touch
+        st = st._replace(ts=jnp.int32(30))
+        st = add_association(cfg, st, jnp.int32(5), jnp.int32(101),
+                             jnp.array(True))
+        assert int(st.pf_age[b, way]) == 30
+
     def test_min_support_one(self):
         cfg = small_cfg(min_support=1, mine_rows=16)
         st = run_trace(cfg, [3, 4, 3, 4])
