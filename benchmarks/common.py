@@ -1,17 +1,23 @@
-"""Shared benchmark scaffolding: trace suite, configs, CSV output."""
+"""Shared benchmark scaffolding: trace suite, configs, sweep runs, telemetry.
+
+Config names come from ``SimConfig.label()`` — the single source of truth
+for CSV columns and ``BENCH_sweep.json`` keys — so adding a config here
+can never drift from the name the sweep telemetry reports.
+"""
 
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Dict
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.cache import SimConfig, max_hit_ratio, simulate
+from repro.cache import SimConfig, SweepResult, sweep
 from repro.cache.base import PF_AMP, PF_MITHRIL, PF_PG
 from repro.configs.mithril_paper import SUITE_MITHRIL
-from repro.traces import suite
+from repro.traces import padded_suite
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
@@ -21,18 +27,20 @@ TRACE_LEN = 40_000
 
 
 def configs(capacity: int = CAPACITY) -> Dict[str, SimConfig]:
-    return {
-        "lru": SimConfig(capacity=capacity),
-        "fifo": SimConfig(capacity=capacity, policy="fifo"),
-        "amp-lru": SimConfig(capacity=capacity, use_amp=True),
-        "pg-lru": SimConfig(capacity=capacity, use_pg=True),
-        "mithril-lru": SimConfig(capacity=capacity, use_mithril=True,
-                                 mithril=SUITE_MITHRIL),
-        "mithril-fifo": SimConfig(capacity=capacity, policy="fifo",
-                                  use_mithril=True, mithril=SUITE_MITHRIL),
-        "mithril-amp": SimConfig(capacity=capacity, use_amp=True,
-                                 use_mithril=True, mithril=SUITE_MITHRIL),
-    }
+    """The benchmark config grid, keyed by canonical ``label()``."""
+    grid = [
+        SimConfig(capacity=capacity),
+        SimConfig(capacity=capacity, policy="fifo"),
+        SimConfig(capacity=capacity, use_amp=True),
+        SimConfig(capacity=capacity, use_pg=True),
+        SimConfig(capacity=capacity, use_mithril=True,
+                  mithril=SUITE_MITHRIL),
+        SimConfig(capacity=capacity, policy="fifo", use_mithril=True,
+                  mithril=SUITE_MITHRIL),
+        SimConfig(capacity=capacity, use_amp=True, use_mithril=True,
+                  mithril=SUITE_MITHRIL),
+    ]
+    return {cfg.label(): cfg for cfg in grid}
 
 
 def pf_src_of(cfg: SimConfig) -> int:
@@ -45,17 +53,69 @@ def pf_src_of(cfg: SimConfig) -> int:
     return 0
 
 
-def run_suite(names, n_traces: int = 20, trace_len: int = TRACE_LEN,
-              capacity: int = CAPACITY):
-    """Simulate the chosen config names over the synthetic suite.
+# --------------------------------------------------------------------------
+# Sweep runs + telemetry for BENCH_sweep.json
+# --------------------------------------------------------------------------
 
-    Yields (trace_name, trace, {config: SimResult})."""
+_TELEMETRY: List[dict] = []
+_SUITE_MEMO: Dict[tuple, tuple] = {}
+
+
+def record_sweep(job: str, config: str, cfg: SimConfig,
+                 res: SweepResult) -> None:
+    """Log one sweep for the machine-readable perf trajectory."""
+    src = pf_src_of(cfg)
+    prec = res.precisions(src) if src else np.full(res.n_traces, np.nan)
+    _TELEMETRY.append({
+        "job": job,
+        "config": config,
+        "n_traces": int(res.n_traces),
+        "hit_ratios": [round(float(h), 6) for h in res.hit_ratios()],
+        "hit_ratio_mean": round(float(res.hit_ratios().mean()), 6),
+        "precision_mean": (None if np.isnan(prec).all()
+                           else round(float(np.nanmean(prec)), 6)),
+        "seconds": round(float(res.seconds), 3),
+        "compiles": int(res.compiles),
+    })
+
+
+def sweep_telemetry() -> List[dict]:
+    return list(_TELEMETRY)
+
+
+def write_bench_json(meta: dict, jobs: List[dict]) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_sweep.json")
+    with open(path, "w") as f:
+        json.dump({"meta": meta, "jobs": jobs,
+                   "sweeps": sweep_telemetry()}, f, indent=2)
+    print(f"wrote {path}")
+    return path
+
+
+def run_sweep(job: str, names, n_traces: int = 20,
+              trace_len: int = TRACE_LEN, capacity: int = CAPACITY,
+              ) -> Tuple[List[str], Dict[str, SweepResult]]:
+    """Sweep the chosen config names over the padded synthetic suite.
+
+    Returns ``(trace_names, {config: SweepResult})``. Sweep results are
+    memoized per (config, suite geometry): jobs that read the same grid
+    (table1 and fig34) share one simulation pass.
+    """
     cfgs = {k: v for k, v in configs(capacity).items() if k in names}
-    for tname, trace in list(suite(trace_len, n_traces).items()):
-        out = {}
-        for cname, cfg in cfgs.items():
-            out[cname] = simulate(cfg, trace)
-        yield tname, trace, out
+    missing = set(names) - set(cfgs)
+    if missing:
+        raise KeyError(f"unknown config names: {sorted(missing)}")
+    tnames, blocks, lengths = padded_suite(trace_len, n_traces)
+    out = {}
+    for cname in names:
+        key = (cname, capacity, n_traces, trace_len)
+        if key not in _SUITE_MEMO:
+            res = sweep(cfgs[cname], blocks, lengths)
+            record_sweep(job, cname, cfgs[cname], res)
+            _SUITE_MEMO[key] = res
+        out[cname] = _SUITE_MEMO[key]
+    return list(tnames), out
 
 
 def write_csv(fname: str, header: str, rows):

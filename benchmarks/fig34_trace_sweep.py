@@ -3,28 +3,29 @@
 Fig 3: MITHRIL vs PG per trace (paper: Pearson r(LRU,PG) ~ 0.99 while
 r(LRU, MITHRIL) is much lower — MITHRIL's wins don't just track LRU).
 Fig 4: MITHRIL-LRU vs AMP and MITHRIL-AMP vs AMP, sorted by AMP.
+
+Shares the batched sweep pass with table1 (``run_sweep`` memoizes per
+suite geometry), so this job is pure post-processing when both run.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from .common import run_suite, write_csv
+from .common import run_sweep, write_csv
+
+NAMES = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp-lru"]
 
 
 def main(n_traces: int = 20, trace_len: int = 40_000):
-    names = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp"]
-    rows = []
-    hrs = {k: [] for k in names}
-    for tname, trace, res in run_suite(names, n_traces, trace_len):
-        for k in names:
-            hrs[k].append(res[k].hit_ratio)
-        rows.append([tname] + [f"{res[k].hit_ratio:.4f}" for k in names])
-    write_csv("fig34_per_trace.csv", "trace," + ",".join(names), rows)
+    tnames, res = run_sweep("fig34_trace_sweep", NAMES, n_traces, trace_len)
+    hrs = {k: res[k].hit_ratios() for k in NAMES}
+    rows = [[tname] + [f"{hrs[k][i]:.4f}" for k in NAMES]
+            for i, tname in enumerate(tnames)]
+    write_csv("fig34_per_trace.csv", "trace," + ",".join(NAMES), rows)
 
     def pearson(a, b):
-        a, b = np.array(a), np.array(b)
-        return float(np.corrcoef(a, b)[0, 1])
+        return float(np.corrcoef(np.asarray(a), np.asarray(b))[0, 1])
 
     r_pg = pearson(hrs["lru"], hrs["pg-lru"])
     r_mith = pearson(hrs["lru"], hrs["mithril-lru"])
@@ -32,9 +33,8 @@ def main(n_traces: int = 20, trace_len: int = 40_000):
               [["lru_vs_pg", f"{r_pg:.3f}"],
                ["lru_vs_mithril", f"{r_mith:.3f}"]])
     print(f"pearson r LRU~PG={r_pg:.3f}  LRU~MITHRIL={r_mith:.3f}")
-    wins = sum(m >= a for m, a in zip(hrs["mithril-lru"], hrs["amp-lru"]))
-    not_worse = sum(m >= a - 0.02
-                    for m, a in zip(hrs["mithril-amp"], hrs["amp-lru"]))
+    wins = int((hrs["mithril-lru"] >= hrs["amp-lru"]).sum())
+    not_worse = int((hrs["mithril-amp-lru"] >= hrs["amp-lru"] - 0.02).sum())
     print(f"MITHRIL-LRU >= AMP on {wins}/{n_traces}; "
           f"MITHRIL-AMP >= AMP-2% on {not_worse}/{n_traces}")
     return {"r_pg": r_pg, "r_mith": r_mith, "wins": wins,

@@ -11,7 +11,7 @@ from .common import configs, write_csv
 def main(trace_len: int = 40_000):
     cfgs = configs()
     names = ["lru", "fifo", "amp-lru", "pg-lru", "mithril-lru",
-             "mithril-fifo", "mithril-amp"]
+             "mithril-fifo", "mithril-amp-lru"]
     rows = []
     for tname, trace in representative_traces(trace_len).items():
         hr = {}

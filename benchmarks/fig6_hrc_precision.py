@@ -1,32 +1,45 @@
-"""Paper Fig 6: hit-ratio curve + prefetch precision across cache sizes."""
+"""Paper Fig 6: hit-ratio curve + prefetch precision across cache sizes.
+
+Each capacity is its own config *shape* (one compile per capacity x
+config); the single Fig-6 trace runs through the sweep engine as a
+batch of one so telemetry lands in BENCH_sweep.json like every other job.
+"""
 
 from __future__ import annotations
 
-from repro.cache import simulate
+import numpy as np
+
+from repro.cache import sweep_grid
 from repro.cache.base import PF_MITHRIL, PF_PG
 from repro.traces import mixed
 
-from .common import configs, write_csv
+from .common import configs, record_sweep, write_csv
 
 SIZES = (64, 128, 256, 512, 1024, 2048)
 
 
 def main(trace_len: int = 40_000):
     trace = mixed(trace_len, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=94)
+    blocks = trace[None, :]
+    lengths = np.array([len(trace)])
     rows = []
     for cap in SIZES:
         cfgs = configs(cap)
-        lru = simulate(cfgs["lru"], trace)
-        pg = simulate(cfgs["pg-lru"], trace)
-        mith = simulate(cfgs["mithril-lru"], trace)
-        rows.append([cap, f"{lru.hit_ratio:.4f}", f"{pg.hit_ratio:.4f}",
-                     f"{mith.hit_ratio:.4f}",
-                     f"{pg.precision(PF_PG):.4f}",
-                     f"{mith.precision(PF_MITHRIL):.4f}"])
-        print(f"cap={cap}: lru={lru.hit_ratio:.3f} pg={pg.hit_ratio:.3f} "
-              f"mith={mith.hit_ratio:.3f} "
-              f"prec pg={pg.precision(PF_PG):.3f} "
-              f"mith={mith.precision(PF_MITHRIL):.3f}")
+        sel = {k: cfgs[k] for k in ("lru", "pg-lru", "mithril-lru")}
+        res = sweep_grid(sel, blocks, lengths)
+        for cname, r in res.items():
+            record_sweep("fig6_hrc_precision", f"{cname}@{cap}",
+                         sel[cname], r)
+        lru, pg, mith = res["lru"], res["pg-lru"], res["mithril-lru"]
+        hr = {k: float(r.hit_ratios()[0]) for k, r in res.items()}
+        p_pg = float(pg.precisions(PF_PG)[0])
+        p_mith = float(mith.precisions(PF_MITHRIL)[0])
+        rows.append([cap, f"{hr['lru']:.4f}", f"{hr['pg-lru']:.4f}",
+                     f"{hr['mithril-lru']:.4f}",
+                     f"{p_pg:.4f}", f"{p_mith:.4f}"])
+        print(f"cap={cap}: lru={hr['lru']:.3f} pg={hr['pg-lru']:.3f} "
+              f"mith={hr['mithril-lru']:.3f} "
+              f"prec pg={p_pg:.3f} mith={p_mith:.3f}")
     write_csv("fig6_hrc_precision.csv",
               "capacity,hr_lru,hr_pg,hr_mithril,prec_pg,prec_mithril", rows)
 

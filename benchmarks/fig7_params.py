@@ -1,54 +1,70 @@
-"""Paper Fig 7: parameter sweeps (S, Delta, P, M, R, recording location)."""
+"""Paper Fig 7: parameter sweeps (S, Delta, P, M, R, recording location).
+
+The whole parameter grid is built up front and run through ``sweep_grid``:
+variants that collapse onto the baseline config (e.g. the pivot of each
+sweep axis equals SUITE_MITHRIL) share one compiled executable via the
+engine's per-config runner cache instead of recompiling.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.cache import SimConfig, simulate
+import numpy as np
+
+from repro.cache import SimConfig, sweep_grid
 from repro.cache.base import PF_MITHRIL
 from repro.configs.mithril_paper import SUITE_MITHRIL
 from repro.core import MithrilConfig
 from repro.traces import mixed
 
-from .common import CAPACITY, write_csv
+from .common import CAPACITY, record_sweep, write_csv
 
 
-def run(mith: MithrilConfig, trace):
-    res = simulate(SimConfig(capacity=CAPACITY, use_mithril=True,
-                             mithril=mith), trace)
-    return res.hit_ratio, res.precision(PF_MITHRIL)
+def _sim(mith: MithrilConfig) -> SimConfig:
+    return SimConfig(capacity=CAPACITY, use_mithril=True, mithril=mith)
+
+
+def param_grid() -> dict:
+    base = SUITE_MITHRIL
+    grid = {}
+    for s in (4, 6, 8, 12, 16):                       # Fig 7a
+        grid[("S", s)] = _sim(dataclasses.replace(base, max_support=s))
+    for d in (5, 10, 25, 50, 100, 200, 400):          # Fig 7b
+        grid[("delta", d)] = _sim(dataclasses.replace(base, lookahead=d))
+    for p in (1, 2, 3, 4, 6):                         # Fig 7c
+        grid[("P", p)] = _sim(dataclasses.replace(base, prefetch_list=p))
+    for mb in (64 << 10, 256 << 10, 1 << 20, 4 << 20):  # Fig 7d (M budget)
+        grid[("M_bytes", mb)] = _sim(MithrilConfig.from_metadata_budget(
+            mb, min_support=base.min_support, max_support=base.max_support,
+            lookahead=base.lookahead, prefetch_list=base.prefetch_list))
+    for r in (1, 2, 3, 4, 6):                         # Fig 7e
+        grid[("R", r)] = _sim(dataclasses.replace(base, min_support=r))
+    for loc in ("miss", "evict", "miss+evict", "all"):  # Fig 7f
+        grid[("record_on", loc)] = _sim(
+            dataclasses.replace(base, record_on=loc))
+    # beyond-paper: symmetric associations
+    for sym in (False, True):
+        grid[("symmetric", sym)] = _sim(
+            dataclasses.replace(base, symmetric=sym))
+    return grid
 
 
 def main(trace_len: int = 30_000):
     trace = mixed(trace_len, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=94)
-    base = SUITE_MITHRIL
-    rows = []
+    blocks = trace[None, :]
+    lengths = np.array([len(trace)])
+    grid = param_grid()
+    res = sweep_grid({f"{p}={v}": cfg for (p, v), cfg in grid.items()},
+                     blocks, lengths)
 
-    for s in (4, 6, 8, 12, 16):                       # Fig 7a
-        hr, pr = run(dataclasses.replace(base, max_support=s), trace)
-        rows.append(["S", s, f"{hr:.4f}", f"{pr:.4f}"])
-    for d in (5, 10, 25, 50, 100, 200, 400):          # Fig 7b
-        hr, pr = run(dataclasses.replace(base, lookahead=d), trace)
-        rows.append(["delta", d, f"{hr:.4f}", f"{pr:.4f}"])
-    for p in (1, 2, 3, 4, 6):                         # Fig 7c
-        hr, pr = run(dataclasses.replace(base, prefetch_list=p), trace)
-        rows.append(["P", p, f"{hr:.4f}", f"{pr:.4f}"])
-    for mb in (64 << 10, 256 << 10, 1 << 20, 4 << 20):  # Fig 7d (M budget)
-        cfg = MithrilConfig.from_metadata_budget(
-            mb, min_support=base.min_support, max_support=base.max_support,
-            lookahead=base.lookahead, prefetch_list=base.prefetch_list)
-        hr, pr = run(cfg, trace)
-        rows.append(["M_bytes", mb, f"{hr:.4f}", f"{pr:.4f}"])
-    for r in (1, 2, 3, 4, 6):                         # Fig 7e
-        hr, pr = run(dataclasses.replace(base, min_support=r), trace)
-        rows.append(["R", r, f"{hr:.4f}", f"{pr:.4f}"])
-    for loc in ("miss", "evict", "miss+evict", "all"):  # Fig 7f
-        hr, pr = run(dataclasses.replace(base, record_on=loc), trace)
-        rows.append(["record_on", loc, f"{hr:.4f}", f"{pr:.4f}"])
-    # beyond-paper: symmetric associations
-    for sym in (False, True):
-        hr, pr = run(dataclasses.replace(base, symmetric=sym), trace)
-        rows.append(["symmetric", sym, f"{hr:.4f}", f"{pr:.4f}"])
+    rows = []
+    for (param, value), cfg in grid.items():
+        r = res[f"{param}={value}"]
+        record_sweep("fig7_params", f"{param}={value}", cfg, r)
+        hr = float(r.hit_ratios()[0])
+        pr = float(r.precisions(PF_MITHRIL)[0])
+        rows.append([param, value, f"{hr:.4f}", f"{pr:.4f}"])
 
     for r in rows:
         print(r)

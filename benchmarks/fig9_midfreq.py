@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.cache import SimConfig, build_step, simulate
+from repro.cache import SimConfig, simulate
 from repro.configs.mithril_paper import SUITE_MITHRIL
 from repro.traces import mixed
 
@@ -54,7 +54,7 @@ def main(trace_len: int = 40_000):
     import functools
     import jax
     import jax.numpy as jnp
-    from repro.core import init, lookup, record
+    from repro.core import init, record
     from repro.core.hashindex import EMPTY
     cfg = SUITE_MITHRIL
     st = init(cfg)

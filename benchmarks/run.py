@@ -2,8 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
-Prints ``name,seconds,derived`` CSV summary lines and writes detailed CSVs
-to results/bench/. (The multi-pod dry-run + roofline table have their own
+Prints ``name,seconds,derived`` CSV summary lines, writes detailed CSVs
+to results/bench/, and emits ``results/bench/BENCH_sweep.json`` — the
+machine-readable perf trajectory (per-config hit ratios, precision,
+wall-clock, compile counts) that CI archives so future PRs can compare
+against it. (The multi-pod dry-run + roofline table have their own
 entry points: repro.launch.dryrun and benchmarks.roofline_table — they
 need the 512-device XLA flag set before jax import.)
 """
@@ -23,10 +26,10 @@ def main(argv=None) -> None:
     n_traces = 6 if a.quick else 16
     tlen = 20_000 if a.quick else 40_000
 
-    from . import (expert_prefetch, fig34_trace_sweep, fig5_representative,
+    from . import (common, expert_prefetch, fig5_representative,
                    fig6_hrc_precision, fig7_params, fig8_latency,
-                   fig9_midfreq, kernel_micro, table1_hit_ratio,
-                   tiered_serving)
+                   fig9_midfreq, fig34_trace_sweep, kernel_micro,
+                   table1_hit_ratio, tiered_serving)
 
     jobs = [
         ("table1_hit_ratio",
@@ -47,15 +50,30 @@ def main(argv=None) -> None:
 
     print("name,seconds,derived")
     failures = 0
+    job_log = []
     for name, fn in jobs:
         t0 = time.time()
         try:
             derived = fn()
-            print(f"{name},{time.time()-t0:.1f},{derived if derived else ''}")
+            dt = time.time() - t0
+            print(f"{name},{dt:.1f},{derived if derived else ''}")
+            job_log.append({"job": name, "seconds": round(dt, 1),
+                            "status": "ok"})
         except Exception as e:
             failures += 1
+            dt = time.time() - t0
             traceback.print_exc()
-            print(f"{name},{time.time()-t0:.1f},FAILED:{type(e).__name__}")
+            print(f"{name},{dt:.1f},FAILED:{type(e).__name__}")
+            job_log.append({"job": name, "seconds": round(dt, 1),
+                            "status": f"FAILED:{type(e).__name__}"})
+
+    import jax
+    common.write_bench_json(
+        meta={"quick": a.quick, "n_traces": n_traces, "trace_len": tlen,
+              "jax": jax.__version__,
+              "backend": jax.default_backend(),
+              "failures": failures},
+        jobs=job_log)
     if failures:
         raise SystemExit(1)
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,10 +41,16 @@ class SimConfig:
     pg: PgConfig = dataclasses.field(default_factory=PgConfig)
 
     def label(self) -> str:
-        pre = "+".join(n for n, u in [("mithril", self.use_mithril),
-                                      ("amp", self.use_amp),
-                                      ("pg", self.use_pg)] if u)
-        return f"{pre + '-' if pre else ''}{self.policy}"
+        """Canonical config name: prefetchers joined by ``-``, then policy.
+
+        Single source of truth for benchmark CSV columns and
+        ``BENCH_sweep.json`` keys (e.g. ``mithril-amp-lru``) — keep
+        ``benchmarks.common.configs()`` keyed off this.
+        """
+        parts = [n for n, u in [("mithril", self.use_mithril),
+                                ("amp", self.use_amp),
+                                ("pg", self.use_pg)] if u]
+        return "-".join(parts + [self.policy])
 
 
 class Stats(NamedTuple):
@@ -91,8 +97,26 @@ def _apply_prefetches(cfg, cache, stats, cands, src):
                           jnp.stack(ev_srcs))
 
 
-def build_step(cfg: SimConfig):
-    """Returns (init_carry, step) for lax.scan over a block trace."""
+def build_segments(cfg: SimConfig):
+    """Per-lane step split into segments separated by mining barriers.
+
+    Returns ``(init_carry, segments)`` where ``segments`` is a list of
+    ``(fn, mine_after)`` pairs and each ``fn(carry, block, aux)`` returns
+    ``(carry, aux)``. ``aux`` threads per-request values (``hit``,
+    ``used_src``, the demand eviction) between segments. ``mine_after=True``
+    marks a point where a MITHRIL recording event may have filled the
+    mining table, so the mining trigger must run before the next segment.
+
+    The split exists for the batched sweep engine (``sweep.py``): under
+    ``vmap`` a per-lane ``lax.cond`` lowers to a select that executes both
+    branches on every request, which would run the expensive mining pass
+    every step. Keeping mine sites *between* segments lets the batched
+    step vmap the cheap segments and guard one batch-level mining check
+    with a real ``lax.cond``. The serial ``build_step`` composes the same
+    segments with a per-lane ``mithril.maybe_mine`` at each barrier, which
+    is bit-identical to triggering inside ``record``.
+    """
+    rec_on = cfg.mithril.record_on
 
     def init_carry():
         carry = {
@@ -107,13 +131,10 @@ def build_step(cfg: SimConfig):
             carry["pg"] = init_pg(cfg.pg)
         return carry
 
-    rec_on = cfg.mithril.record_on
-
-    def step(carry, block):
+    def seg_access(carry, block, aux):
+        """Demand access + hit/eviction statistics."""
         cache, stats = carry["cache"], carry["stats"]
         stats = stats._replace(requests=stats.requests + 1)
-
-        # 1. demand access
         cache, hit, used_src, ev = base.access(cache, block, cfg.policy)
         stats = stats._replace(
             hits=stats.hits + hit.astype(jnp.int32),
@@ -121,35 +142,48 @@ def build_step(cfg: SimConfig):
                 (used_src != PF_NONE).astype(jnp.int32)),
             pf_evicted_unused=stats.pf_evicted_unused.at[ev.pf_src].add(
                 ev.unused_pf.astype(jnp.int32)))
+        out = dict(carry)
+        out["cache"], out["stats"] = cache, stats
+        return out, {"hit": hit, "used_src": used_src, "ev": ev}
 
+    def seg_record_miss(carry, block, aux):
+        mith = lax.cond(~aux["hit"],
+                        functools.partial(mithril.record_event, cfg.mithril,
+                                          block=block),
+                        lambda s: s, carry["mith"])
+        return {**carry, "mith": mith}, aux
+
+    def seg_record_evict(carry, block, aux):
+        ev = aux["ev"]
+        mith = lax.cond(ev.block != EMPTY,
+                        functools.partial(mithril.record_event, cfg.mithril,
+                                          block=ev.block),
+                        lambda s: s, carry["mith"])
+        return {**carry, "mith": mith}, aux
+
+    def seg_record_all(carry, block, aux):
+        mith = mithril.record_event(cfg.mithril, carry["mith"], block)
+        return {**carry, "mith": mith}, aux
+
+    def seg_prefetch(carry, block, aux):
+        """Prefetch issue for every enabled layer (no mining in here)."""
+        cache, stats = carry["cache"], carry["stats"]
+        used_src, ev = aux["used_src"], aux["ev"]
         out = dict(carry)
 
-        # 2. MITHRIL: record per policy, then prefetch-list check (Alg. 3)
+        # MITHRIL prefetch-list check (Alg. 3 pFlag path)
         if cfg.use_mithril:
-            mith = carry["mith"]
-            if rec_on in ("miss", "miss+evict"):
-                mith = lax.cond(~hit,
-                                functools.partial(mithril.record, cfg.mithril,
-                                                  block=block),
-                                lambda s: s, mith)
-            if rec_on in ("evict", "miss+evict"):
-                mith = lax.cond(ev.block != EMPTY,
-                                functools.partial(mithril.record, cfg.mithril,
-                                                  block=ev.block),
-                                lambda s: s, mith)
-            if rec_on == "all":
-                mith = mithril.record(cfg.mithril, mith, block)
-            cands = mithril.lookup(cfg.mithril, mith, block)
+            cands = mithril.lookup(cfg.mithril, carry["mith"], block)
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
                                                 PF_MITHRIL)
-            out["mith"] = mith
 
-        # 3. AMP sequential prefetching + degree feedback
+        # AMP sequential prefetching + degree feedback
         if cfg.use_amp:
             amp = carry["amp"]
             amp = amp_feedback_used(cfg.amp, amp, block, used_src == PF_AMP)
             amp, vec = amp_access(cfg.amp, amp, block)
-            cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec, PF_AMP)
+            cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec,
+                                                  PF_AMP)
             evb, evu, evsrc = evs
             for i in range(evb.shape[0]):
                 amp = amp_feedback_evicted(cfg.amp, amp, evb[i],
@@ -158,15 +192,42 @@ def build_step(cfg: SimConfig):
                                        ev.unused_pf & (ev.pf_src == PF_AMP))
             out["amp"] = amp
 
-        # 4. probability graph
+        # probability graph
         if cfg.use_pg:
             pg = carry["pg"]
             pg, cands = pg_access(cfg.pg, pg, block)
-            cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands, PF_PG)
+            cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
+                                                PF_PG)
             out["pg"] = pg
 
         out["cache"], out["stats"] = cache, stats
-        return out, hit
+        return out, aux
+
+    segments = [(seg_access, False)]
+    if cfg.use_mithril:
+        if rec_on in ("miss", "miss+evict"):
+            segments.append((seg_record_miss, True))
+        if rec_on in ("evict", "miss+evict"):
+            segments.append((seg_record_evict, True))
+        if rec_on == "all":
+            segments.append((seg_record_all, True))
+    segments.append((seg_prefetch, False))
+    return init_carry, segments
+
+
+def build_step(cfg: SimConfig):
+    """Returns (init_carry, step) for lax.scan over a block trace."""
+    init_carry, segments = build_segments(cfg)
+
+    def step(carry, block):
+        aux = {}
+        for fn, mine_after in segments:
+            carry, aux = fn(carry, block, aux)
+            if mine_after:
+                carry = {**carry,
+                         "mith": mithril.maybe_mine(cfg.mithril,
+                                                    carry["mith"])}
+        return carry, aux["hit"]
 
     return init_carry, step
 

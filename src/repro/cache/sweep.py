@@ -1,0 +1,251 @@
+"""Batched trace-sweep engine: one compiled step per *config shape*.
+
+The serial ``simulate`` compiles one ``lax.scan`` per (trace, config)
+pair, so sweeping a benchmark suite is compile-bound long before it is
+compute-bound. This module instead
+
+* pads a suite of traces to a common length (``pad_traces`` /
+  ``repro.traces.padded_suite``),
+* ``vmap``s the per-request step over the trace axis (requests at the
+  same position of every trace advance together),
+* scans over fixed-size time *chunks* so peak memory is bounded by
+  ``chunk * n_traces`` and arbitrarily long traces stream through the
+  same compiled executable, and
+* masks padded tails per trace so statistics are bit-identical to the
+  per-trace ``simulate`` (``tests/test_sweep.py`` asserts this).
+
+Batching invariants (DESIGN.md §6):
+
+* the per-lane step is pure integer arithmetic, so the both-branches
+  ``select`` that ``vmap`` lowers ``lax.cond`` to is bit-exact;
+* the one expensive rare branch — the MITHRIL mining pass — is hoisted
+  out of the vmapped step via the segment barriers of
+  ``simulator.build_segments`` and guarded by a *batch-level*
+  ``lax.cond`` (``jnp.any(need)``), so it only executes when some live
+  lane actually filled its mining table;
+* padded-tail requests select the previous carry wholesale, so an
+  exhausted lane can neither change state nor trigger mining.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import mithril
+from .simulator import SimConfig, SimResult, Stats, build_segments
+
+DEFAULT_CHUNK = 4096
+
+
+class PaddedSuite(NamedTuple):
+    names: tuple            # (B,) trace names
+    blocks: np.ndarray      # (B, T) int32, zero-padded past each length
+    lengths: np.ndarray     # (B,) valid request count per trace
+
+
+def pad_traces(traces: Union[Mapping[str, np.ndarray],
+                             Sequence[np.ndarray]]) -> PaddedSuite:
+    """Stack unequal-length traces into a zero-padded (B, T) batch."""
+    if isinstance(traces, Mapping):
+        names = tuple(traces.keys())
+        arrs = [np.asarray(t, np.int32) for t in traces.values()]
+    else:
+        arrs = [np.asarray(t, np.int32) for t in traces]
+        names = tuple(f"trace{i:03d}" for i in range(len(arrs)))
+    if not arrs:
+        raise ValueError("pad_traces needs at least one trace")
+    lengths = np.array([len(a) for a in arrs], np.int64)
+    blocks = np.zeros((len(arrs), int(lengths.max())), np.int32)
+    for i, a in enumerate(arrs):
+        blocks[i, : len(a)] = a
+    return PaddedSuite(names, blocks, lengths)
+
+
+def _mask(valid: jax.Array, new, old):
+    """Per-lane select: keep ``new`` where valid, else ``old``."""
+    sel = valid.reshape(valid.shape + (1,) * (new.ndim - valid.ndim))
+    return jnp.where(sel, new, old)
+
+
+def build_batched_step(cfg: SimConfig):
+    """Returns (init_batched, step) for a scan over (chunk, B) request slabs.
+
+    ``step(carry, (blocks, valid))`` advances every trace lane by one
+    request: the cheap segments run under ``vmap``, each mining barrier
+    runs one batch-level ``lax.cond`` (vmapped mine selected per lane),
+    and invalid (padded) lanes keep their previous carry bit-for-bit.
+    """
+    init_carry, segments = build_segments(cfg)
+    mine_rows = cfg.mithril.mine_rows
+
+    def init_batched(batch_size: int):
+        return jax.vmap(lambda _: init_carry())(jnp.arange(batch_size))
+
+    def batched_maybe_mine(mith, valid):
+        """Mine exactly the lanes whose table filled this step.
+
+        This runs at batch level — *outside* vmap — so ``lax.cond`` is a
+        real runtime conditional, not a select: total mining work stays
+        equal to the serial per-lane sum (a vmapped mine here would cost
+        O(B) per trigger and O(B^2) per sweep).
+        """
+        need = (mith.mine_fill >= mine_rows) & valid
+        mine_fn = functools.partial(mithril.mine, cfg.mithril)
+
+        def mine_lane(i, m):
+            lane = jax.tree_util.tree_map(lambda x: x[i], m)
+            mined = lax.cond(need[i], mine_fn, lambda s: s, lane)
+            return jax.tree_util.tree_map(
+                lambda x, v: x.at[i].set(v), m, mined)
+
+        return lax.cond(
+            jnp.any(need),
+            lambda m: lax.fori_loop(0, need.shape[0], mine_lane, m),
+            lambda m: m, mith)
+
+    def step(carry, xs):
+        block, valid = xs
+        new, aux = carry, {}
+        for fn, mine_after in segments:
+            new, aux = jax.vmap(fn)(new, block, aux)
+            if mine_after:
+                new = {**new,
+                       "mith": batched_maybe_mine(new["mith"], valid)}
+        # padded tails: discard every intra-step change for ended lanes
+        new = jax.tree_util.tree_map(
+            functools.partial(_mask, valid), new, carry)
+        return new, aux["hit"] & valid
+
+    return init_batched, step
+
+
+@functools.lru_cache(maxsize=None)
+def _runner(cfg: SimConfig, unroll: int):
+    """One (init, jitted chunk-scan) pair per config; jit caches per shape."""
+    init_batched, step = build_batched_step(cfg)
+
+    @jax.jit
+    def run_chunk(carry, blocks, valid):
+        return lax.scan(step, carry, (blocks, valid), unroll=unroll)
+
+    return init_batched, run_chunk
+
+
+def compile_count(cfg: SimConfig, unroll: int = 1) -> int:
+    """Compiled-executable count for ``cfg``'s chunk runner (-1 if unknown).
+
+    All chunks are padded to one (chunk, B) shape, so a full sweep — and
+    every later sweep with the same batch geometry — reports 1.
+    """
+    fn = _runner(cfg, unroll)[1]
+    try:
+        return int(fn._cache_size())
+    except AttributeError:      # jit internals moved; treat as unknown
+        return -1
+
+
+def reset_runners() -> None:
+    """Drop cached compiled runners (test isolation for compile counts)."""
+    _runner.cache_clear()
+
+
+class SweepResult(NamedTuple):
+    stats: Stats            # stacked: every leaf has a leading (B,) axis
+    hit_curve: np.ndarray   # (B, T) bool, False past each trace's length
+    lengths: np.ndarray     # (B,)
+    compiles: int           # NEW compiles this sweep caused (0 = all cached)
+    seconds: float          # wall-clock for this sweep call
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.lengths)
+
+    def result(self, i: int) -> SimResult:
+        """Per-trace view, same type the serial ``simulate`` returns."""
+        stats = Stats(*(np.asarray(leaf)[i] for leaf in self.stats))
+        return SimResult(stats, self.hit_curve[i, : int(self.lengths[i])])
+
+    def hit_ratios(self) -> np.ndarray:
+        req = np.maximum(np.asarray(self.stats.requests), 1)
+        return np.asarray(self.stats.hits) / req
+
+    def precisions(self, src: int) -> np.ndarray:
+        issued = np.asarray(self.stats.pf_issued)[:, src].astype(np.float64)
+        used = np.asarray(self.stats.pf_used)[:, src]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(issued > 0, used / issued, np.nan)
+
+
+def sweep(cfg: SimConfig, blocks: np.ndarray,
+          lengths: Optional[np.ndarray] = None,
+          chunk: int = DEFAULT_CHUNK, unroll: int = 1) -> SweepResult:
+    """Run a (B, T) padded trace batch through one configuration.
+
+    ``lengths`` gives each trace's valid prefix (default: full T).
+    Requests past a trace's length are masked no-ops excluded from all
+    statistics. Time is padded up to a chunk multiple so every chunk has
+    the same shape — one compilation serves the whole stream.
+    """
+    import time
+
+    t0 = time.time()
+    blocks = np.ascontiguousarray(np.asarray(blocks, np.int32))
+    if blocks.ndim != 2:
+        raise ValueError(f"blocks must be (B, T), got {blocks.shape}")
+    n_traces, n_req = blocks.shape
+    lengths = (np.full((n_traces,), n_req, np.int64) if lengths is None
+               else np.asarray(lengths, np.int64))
+    if lengths.shape != (n_traces,) or (lengths > n_req).any():
+        raise ValueError("lengths must be (B,) and <= trace axis")
+
+    chunk = max(1, min(chunk, n_req))
+    n_chunks = -(-n_req // chunk)
+    padded_t = n_chunks * chunk
+    valid = (np.arange(padded_t)[None, :] < lengths[:, None])
+    if padded_t != n_req:
+        blocks = np.pad(blocks, ((0, 0), (0, padded_t - n_req)))
+
+    init_batched, run_chunk = _runner(cfg, unroll)
+    before = compile_count(cfg, unroll)
+    carry = init_batched(n_traces)
+    hit_chunks = []
+    for k in range(n_chunks):
+        sl = slice(k * chunk, (k + 1) * chunk)
+        carry, hits = run_chunk(carry,
+                                jnp.asarray(blocks[:, sl].T),
+                                jnp.asarray(valid[:, sl].T))
+        hit_chunks.append(np.asarray(hits).T)    # (B, chunk)
+
+    stats = jax.device_get(carry["stats"])
+    hit_curve = np.concatenate(hit_chunks, axis=1)[:, :n_req]
+    after = compile_count(cfg, unroll)
+    return SweepResult(stats=stats, hit_curve=hit_curve, lengths=lengths,
+                       compiles=(after - before if before >= 0 else -1),
+                       seconds=time.time() - t0)
+
+
+def sweep_grid(cfgs: Dict[str, SimConfig], blocks: np.ndarray,
+               lengths: Optional[np.ndarray] = None,
+               chunk: int = DEFAULT_CHUNK,
+               unroll: int = 1) -> Dict[str, SweepResult]:
+    """Sweep the trace batch through every config in the grid.
+
+    Grid entries with *equal* configs — e.g. a parameter sweep whose
+    pivot equals the baseline — share one simulation pass outright (the
+    frozen configs are hashable), on top of the per-config executable
+    cache in ``_runner``.
+    """
+    memo: Dict[SimConfig, SweepResult] = {}
+    out = {}
+    for name, cfg in cfgs.items():
+        if cfg not in memo:
+            memo[cfg] = sweep(cfg, blocks, lengths, chunk=chunk,
+                              unroll=unroll)
+        out[name] = memo[cfg]
+    return out

@@ -10,7 +10,7 @@ axis sizes, so scale-down to any divisor mesh (or scale-up) "just works".
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

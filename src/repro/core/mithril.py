@@ -180,14 +180,35 @@ def _record_event(cfg: MithrilConfig, state: MithrilState,
     return state._replace(ts=ts + 1)
 
 
-def record(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
-           pairwise_fn: Optional[Callable] = None) -> MithrilState:
-    """Record one request (Alg. 3 rFlag path); mines when the table fills."""
-    state = _record_event(cfg, state, block)
+def record_event(cfg: MithrilConfig, state: MithrilState,
+                 block: jax.Array) -> MithrilState:
+    """Record one request WITHOUT the mining trigger (rFlag path only).
+
+    Callers must follow up with :func:`maybe_mine` before the next
+    recording event — the mining table holds at most ``mine_rows`` rows and
+    ``_migrate`` relies on it not being full. The split exists for the
+    batched sweep engine: under ``vmap`` a per-lane ``lax.cond`` lowers to
+    a select that executes *both* branches every step, so the (rare,
+    expensive) mining pass must be hoisted out of the vmapped step and
+    guarded by a batch-level ``lax.cond`` instead.
+    """
+    return _record_event(cfg, state, block)
+
+
+def maybe_mine(cfg: MithrilConfig, state: MithrilState,
+               pairwise_fn: Optional[Callable] = None) -> MithrilState:
+    """Run ``mine`` iff the mining table is full (the Alg. 3 trigger)."""
     return lax.cond(
         state.mine_fill >= cfg.mine_rows,
         functools.partial(mine, cfg, pairwise_fn=pairwise_fn),
         lambda s: s, state)
+
+
+def record(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
+           pairwise_fn: Optional[Callable] = None) -> MithrilState:
+    """Record one request (Alg. 3 rFlag path); mines when the table fills."""
+    state = _record_event(cfg, state, block)
+    return maybe_mine(cfg, state, pairwise_fn=pairwise_fn)
 
 
 def access(cfg: MithrilConfig, state: MithrilState, block: jax.Array,

@@ -33,7 +33,7 @@ Strategies:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -11,7 +11,6 @@ exposed as a probe (`kv_tile_probe`) and trip counts are analytic.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

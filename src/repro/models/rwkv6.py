@@ -12,7 +12,7 @@ in tests. The decay w_t is data-dependent via a low-rank MLP, as in Finch.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -20,10 +20,9 @@ Hardware model (TPU v5e): 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import json
 import os
-from typing import Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
 from repro.dist.ctx import sharding_ctx
 from repro.launch.mesh import dp_axes_of
-from repro.launch.specs import batch_sds, cache_sds, params_sds
+from repro.launch.specs import cache_sds, params_sds
 from repro.models import RunFlags
 from repro.models.attention import block_plan
 from repro.models.lm import apply_layer, layer_groups

@@ -1,11 +1,11 @@
 """Synthetic trace generators + io (DESIGN.md §8 deviation 1)."""
 
 from .synthetic import (association_groups, interleaved_sequential, mixed,
-                        representative_traces, suite, zipf)
+                        padded_suite, representative_traces, suite, zipf)
 from .io import load_traces, save_traces, workload_stats
 
 __all__ = [
     "association_groups", "interleaved_sequential", "mixed",
-    "representative_traces", "suite", "zipf",
+    "padded_suite", "representative_traces", "suite", "zipf",
     "load_traces", "save_traces", "workload_stats",
 ]

@@ -143,6 +143,33 @@ def suite(n_requests: int = 60_000, n_traces: int = 30) -> Dict[str, np.ndarray]
     return traces
 
 
+def padded_suite(n_requests: int = 60_000, n_traces: int = 30,
+                 min_frac: float = 1.0, seed: int = 1234):
+    """The evaluation suite as one zero-padded batch for the sweep engine.
+
+    Returns ``(names, blocks, lengths)`` with ``blocks`` of shape
+    ``(n_traces, n_requests)`` int32 and per-trace valid ``lengths``.
+    With ``min_frac < 1`` each trace keeps a prefix of uniformly drawn
+    length in ``[min_frac * n_requests, n_requests]`` so the batch
+    exercises the padded-tail masking path; the default keeps every trace
+    full length, making results directly comparable with the serial
+    ``suite()``. Trace contents are identical to ``suite()`` prefixes.
+    """
+    if not 0.0 < min_frac <= 1.0:
+        raise ValueError("min_frac must be in (0, 1]")
+    traces = suite(n_requests, n_traces)
+    rng = np.random.default_rng(seed)
+    names = tuple(traces.keys())
+    lengths = np.full((n_traces,), n_requests, np.int64)
+    if min_frac < 1.0:
+        lengths = rng.integers(max(1, int(min_frac * n_requests)),
+                               n_requests + 1, size=n_traces)
+    blocks = np.zeros((n_traces, n_requests), np.int32)
+    for i, name in enumerate(names):
+        blocks[i, : lengths[i]] = traces[name][: lengths[i]]
+    return names, blocks, lengths
+
+
 def representative_traces(n_requests: int = 60_000) -> Dict[str, np.ndarray]:
     """Six traces mirroring the paper's Fig. 5 regimes."""
     return {

@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.mining import pairwise_codes
 from repro.kernels import ops, ref
 
 

@@ -1,6 +1,5 @@
 """Model substrate: per-arch smoke + numerics cross-checks."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,6 @@
 """AMP and PG prefetcher behavior."""
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.cache.amp import AmpConfig, amp_access, amp_feedback_used, init_amp
 from repro.cache.pg import PgConfig, init_pg, pg_access

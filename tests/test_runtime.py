@@ -10,7 +10,6 @@ import pytest
 
 from repro.checkpoint import CheckpointManager, plan_remesh
 from repro.data import DataConfig, SyntheticPipeline
-from repro.optim import adamw
 from repro.runtime import (HeartbeatMonitor, StragglerPolicy, WorkerFailure,
                            compressed_psum, dequantize_int8, fake_quant_grads,
                            quantize_int8, run_with_restarts)

@@ -1,6 +1,5 @@
 """Composable trace simulator: the paper's layering claims at small scale."""
 
-import numpy as np
 import pytest
 
 from repro.cache import SimConfig, max_hit_ratio, simulate

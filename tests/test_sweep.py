@@ -1,0 +1,105 @@
+"""Batched sweep engine vs the serial simulator.
+
+The contract (ISSUE 2 / DESIGN.md §6): for every benchmark config, the
+batched chunked-vmap sweep over unequal-length traces is *bit-identical*
+to running each trace through ``simulate`` on its own, padded tails are
+excluded from every statistic, and a whole sweep costs one compilation
+per config shape.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.common import configs
+from repro.cache import pad_traces, simulate, sweep
+from repro.cache.sweep import reset_runners
+from repro.traces import mixed, padded_suite
+
+CAP = 128
+CHUNK = 512     # traces below span multiple chunks incl. a partial tail
+
+
+@pytest.fixture(scope="module")
+def traces():
+    # deliberately unequal lengths: masking must carry two exhausted
+    # lanes through the final chunks without touching their state
+    return {
+        "long": mixed(1200, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=7),
+        "mid": mixed(900, w_seq=0.4, w_assoc=0.3, w_zipf=0.3, seed=8),
+        "short": mixed(600, w_seq=0.1, w_assoc=0.7, w_zipf=0.2, seed=9),
+    }
+
+
+@pytest.fixture(scope="module")
+def swept(traces):
+    """One sweep per benchmark config over the padded batch."""
+    reset_runners()
+    suite = pad_traces(traces)
+    return suite, {name: sweep(cfg, suite.blocks, suite.lengths, chunk=CHUNK)
+                   for name, cfg in configs(CAP).items()}
+
+
+def test_sweep_bit_identical_to_simulate(traces, swept):
+    _, results = swept
+    for name, cfg in configs(CAP).items():
+        res = results[name]
+        for i, trace in enumerate(traces.values()):
+            ref = simulate(cfg, trace)
+            got = res.result(i)
+            for field, a, b in zip(ref.stats._fields, got.stats, ref.stats):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{name}: stats.{field} diverged on trace {i}")
+            np.testing.assert_array_equal(
+                got.hit_curve, np.asarray(ref.hit_curve),
+                err_msg=f"{name}: hit curve diverged on trace {i}")
+
+
+def test_padded_tail_excluded(traces, swept):
+    suite, results = swept
+    tail = np.arange(suite.blocks.shape[1])[None, :] >= suite.lengths[:, None]
+    for name, res in results.items():
+        # requests counts exactly the valid prefix, nothing from the pad
+        np.testing.assert_array_equal(
+            np.asarray(res.stats.requests), suite.lengths,
+            err_msg=f"{name}: padded requests leaked into stats")
+        assert not res.hit_curve[tail].any(), \
+            f"{name}: hits recorded past a trace's end"
+
+
+def test_pad_value_is_inert(traces):
+    """Stats must not depend on what the padding bytes contain."""
+    cfg = configs(CAP)["mithril-lru"]
+    suite = pad_traces(traces)
+    junk = suite.blocks.copy()
+    junk[np.arange(junk.shape[1])[None, :] >= suite.lengths[:, None]] = 12345
+    a = sweep(cfg, suite.blocks, suite.lengths, chunk=CHUNK)
+    b = sweep(cfg, junk, suite.lengths, chunk=CHUNK)
+    for field, x, y in zip(a.stats._fields, a.stats, b.stats):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"stats.{field} read the pad")
+
+
+def test_one_compile_per_config_shape(swept):
+    _, results = swept
+    for name, res in results.items():
+        assert res.compiles == 1, (
+            f"{name}: {res.compiles} compiles for one batch geometry "
+            f"(want exactly 1 per config shape)")
+
+
+def test_padded_suite_masking_geometry():
+    names, blocks, lengths = padded_suite(2000, 4, min_frac=0.5, seed=5)
+    assert blocks.shape == (4, 2000) and len(names) == 4
+    assert (lengths >= 1000).all() and (lengths <= 2000).all()
+    assert (lengths < 2000).any()        # jitter actually shortened some
+    tail = np.arange(2000)[None, :] >= lengths[:, None]
+    assert not blocks[tail].any()        # zero-padded past each length
+    # full-length batch matches the serial suite() exactly
+    from repro.traces import suite as serial_suite
+    names_f, blocks_f, lengths_f = padded_suite(1000, 3)
+    ref = serial_suite(1000, 3)
+    assert list(names_f) == list(ref.keys())
+    assert (lengths_f == 1000).all()
+    for i, k in enumerate(ref):
+        np.testing.assert_array_equal(blocks_f[i], ref[k])

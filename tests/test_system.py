@@ -2,7 +2,6 @@
 dry-run/roofline machinery at miniature scale."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
