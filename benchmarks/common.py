@@ -63,12 +63,19 @@ _SUITE_MEMO: Dict[tuple, tuple] = {}
 
 def record_sweep(job: str, config: str, cfg: SimConfig,
                  res: SweepResult) -> None:
-    """Log one sweep for the machine-readable perf trajectory."""
+    """Log one sweep for the machine-readable perf trajectory.
+
+    Prints the canonical ``SimConfig.label()`` next to the result row —
+    the same key BENCH_sweep.json and the README's config tables use —
+    so job-local names (``delta=50``, ``mithril-lru@1024``) always
+    resolve to a canonical configuration.
+    """
     src = pf_src_of(cfg)
     prec = res.precisions(src) if src else np.full(res.n_traces, np.nan)
-    _TELEMETRY.append({
+    entry = {
         "job": job,
         "config": config,
+        "label": cfg.label(),
         "n_traces": int(res.n_traces),
         "hit_ratios": [round(float(h), 6) for h in res.hit_ratios()],
         "hit_ratio_mean": round(float(res.hit_ratios().mean()), 6),
@@ -76,7 +83,11 @@ def record_sweep(job: str, config: str, cfg: SimConfig,
                            else round(float(np.nanmean(prec)), 6)),
         "seconds": round(float(res.seconds), 3),
         "compiles": int(res.compiles),
-    })
+    }
+    _TELEMETRY.append(entry)
+    print(f"  [{job}] {config:<24} label={entry['label']:<18} "
+          f"hit={entry['hit_ratio_mean']:.4f} "
+          f"sec={entry['seconds']:7.2f} compiles={entry['compiles']}")
 
 
 def sweep_telemetry() -> List[dict]:

@@ -1,0 +1,129 @@
+"""Compare a fresh BENCH_sweep.json against the checked-in baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare [--fresh PATH] [--baseline PATH]
+
+Policy (ROADMAP open item 2 — make CI *compare* trajectories, not just
+archive them):
+
+* hit-ratio drift on any (job, config) sweep present in both files is a
+  FAILURE (exit 1): the simulator is integer arithmetic end to end, so
+  hit ratios are bit-stable across machines — any drift is a semantics
+  change and must be an intentional, baseline-updating commit;
+* wall-clock regression beyond ``--wallclock-warn`` (default 20%) is a
+  WARNING only — CI machines are noisy;
+* sweeps missing from the baseline are reported and skipped (new
+  benchmarks seed their own trajectory on the next baseline refresh);
+  sweeps missing from the fresh run FAIL (a benchmark silently died).
+
+Refresh the baseline by copying a trusted run:
+
+    cp results/bench/BENCH_sweep.json results/bench/BENCH_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+BENCH_DIR = os.path.join(HERE, "..", "results", "bench")
+HIT_TOL = 1e-9
+
+
+def _key(sweep: dict) -> tuple:
+    return (sweep["job"], sweep["config"])
+
+
+def _index(doc: dict) -> dict:
+    return {_key(s): s for s in doc.get("sweeps", [])}
+
+
+def compare(fresh: dict, baseline: dict, wallclock_warn: float):
+    """Returns (failures, warnings, notes, n_compared)."""
+    failures, warnings, notes = [], [], []
+    fresh_ix, base_ix = _index(fresh), _index(baseline)
+
+    fresh_meta, base_meta = fresh.get("meta", {}), baseline.get("meta", {})
+    geometry = ("quick", "n_traces", "trace_len")
+    if any(fresh_meta.get(k) != base_meta.get(k) for k in geometry):
+        notes.append(
+            f"geometry differs (fresh={[fresh_meta.get(k) for k in geometry]}"
+            f" baseline={[base_meta.get(k) for k in geometry]}): "
+            "hit ratios are not comparable, only checking job health")
+        base_ix = {}
+
+    for key, base in base_ix.items():
+        got = fresh_ix.get(key)
+        if got is None:
+            failures.append(f"{key}: sweep missing from fresh run")
+            continue
+        if len(got["hit_ratios"]) != len(base["hit_ratios"]):
+            failures.append(
+                f"{key}: trace count changed "
+                f"{len(base['hit_ratios'])} -> {len(got['hit_ratios'])}")
+            continue
+        drift = [(i, b, g) for i, (b, g) in
+                 enumerate(zip(base["hit_ratios"], got["hit_ratios"]))
+                 if abs(b - g) > HIT_TOL]
+        if drift:
+            i, b, g = drift[0]
+            failures.append(
+                f"{key}: hit-ratio drift on {len(drift)} trace(s), e.g. "
+                f"trace {i}: baseline={b:.6f} fresh={g:.6f}")
+        if got["compiles"] > max(base["compiles"], 1):
+            failures.append(
+                f"{key}: compile count regressed "
+                f"{base['compiles']} -> {got['compiles']}")
+        if base["seconds"] > 0 and (got["seconds"]
+                                    > base["seconds"] * (1 + wallclock_warn)):
+            warnings.append(
+                f"{key}: wall-clock {base['seconds']:.2f}s -> "
+                f"{got['seconds']:.2f}s "
+                f"(+{100 * (got['seconds'] / base['seconds'] - 1):.0f}%)")
+
+    for key in fresh_ix.keys() - base_ix.keys():
+        notes.append(f"{key}: not in baseline (new sweep, unchecked)")
+
+    failed_jobs = [j for j in fresh.get("jobs", [])
+                   if j.get("status") != "ok"]
+    for j in failed_jobs:
+        failures.append(f"job {j.get('job')}: {j.get('status')}")
+    return failures, warnings, notes, len(base_ix)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh",
+                    default=os.path.join(BENCH_DIR, "BENCH_sweep.json"))
+    ap.add_argument("--baseline",
+                    default=os.path.join(BENCH_DIR, "BENCH_baseline.json"))
+    ap.add_argument("--wallclock-warn", type=float, default=0.20,
+                    help="warn when wall-clock regresses past this fraction")
+    a = ap.parse_args(argv)
+
+    with open(a.fresh) as f:
+        fresh = json.load(f)
+    if not os.path.exists(a.baseline):
+        print(f"no baseline at {a.baseline}; nothing to compare "
+              "(check one in to start the trajectory)")
+        return 0
+    with open(a.baseline) as f:
+        baseline = json.load(f)
+
+    failures, warnings, notes, n = compare(fresh, baseline,
+                                           a.wallclock_warn)
+    for m in notes:
+        print(f"NOTE  {m}")
+    for m in warnings:
+        print(f"WARN  {m}")
+    for m in failures:
+        print(f"FAIL  {m}")
+    print(f"compared {n} baseline sweep(s): "
+          f"{len(failures)} failure(s), {len(warnings)} warning(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,7 @@ evicted is instead refreshed to MRU once (Sec. 4.2.2).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,92 +62,115 @@ def contains(state: CacheState, block: jax.Array) -> jax.Array:
     return jnp.any(state.key[b] == block)
 
 
-def _victim_with_second_chance(state: CacheState, b: jax.Array):
-    """LRU victim; grant at most one second chance to an unused prefetch."""
-    stamps = state.stamp[b]
-    protected = (state.pf_flag[b] == 1) & (state.pf_sc[b] == 0)
-    v0 = jnp.argmin(stamps).astype(jnp.int32)
-    grant = protected[v0]
-    # refresh the granted way to MRU and mark its chance consumed
-    new_stamp = state.stamp.at[b, v0].set(
-        jnp.where(grant, state.clock, stamps[v0]))
-    new_sc = state.pf_sc.at[b, v0].set(
-        jnp.where(grant, 1, state.pf_sc[b, v0]))
-    st = state._replace(stamp=new_stamp, pf_sc=new_sc)
-    v1 = jnp.argmin(st.stamp[b]).astype(jnp.int32)
-    victim = jnp.where(grant, v1, v0)
-    return st, victim
+def _insert_rows(state: CacheState, b: jax.Array, block: jax.Array,
+                 pf: jax.Array, src: jax.Array):
+    """Insertion as branchless row values for bucket ``b``.
 
+    Returns ``(rows, ev)`` where ``rows`` are the post-insert
+    (key, stamp, pf_flag, pf_sc, pf_src) rows. The empty-way /
+    second-chance / plain-eviction cases are all computed on the (W,)
+    bucket rows and selected as scalars (DESIGN.md §7) — the caller
+    applies one ``.at[b].set(row)`` scatter per table, so under ``vmap``
+    nothing ever copies the whole cache.
+    """
+    keys, stamps = state.key[b], state.stamp[b]
+    flags, scs, srcs = state.pf_flag[b], state.pf_sc[b], state.pf_src[b]
+    ways = jnp.arange(keys.shape[0])
 
-def _insert(state: CacheState, block: jax.Array, pf: jax.Array,
-            src: jax.Array) -> Tuple[CacheState, Evicted]:
-    b = bucket_of(block, state.key.shape[0])
-    empty = state.key[b] == EMPTY
+    empty = keys == EMPTY
     any_empty = jnp.any(empty)
+    w_empty = jnp.argmax(empty).astype(jnp.int32)
 
-    def empty_path(st: CacheState):
-        return st, jnp.argmax(empty).astype(jnp.int32)
+    # second chance: only consulted (and consumed) when evicting. The
+    # LRU victim, if an unused prefetch with its chance left, is
+    # refreshed to MRU once and the next-oldest way evicts instead.
+    protected = (flags == 1) & (scs == 0)
+    v0 = jnp.argmin(stamps).astype(jnp.int32)
+    grant = protected[v0] & ~any_empty
+    stamps = jnp.where((ways == v0) & grant, state.clock, stamps)
+    scs = jnp.where((ways == v0) & grant, 1, scs)
+    v1 = jnp.argmin(stamps).astype(jnp.int32)
+    way = jnp.where(any_empty, w_empty, jnp.where(grant, v1, v0))
 
-    # the second chance is only consulted (and consumed) when an eviction
-    # is actually required
-    st, way = jax.lax.cond(any_empty, empty_path,
-                           lambda s: _victim_with_second_chance(s, b), state)
-
-    ev_block = jnp.where(any_empty, EMPTY, st.key[b, way])
     ev = Evicted(
-        block=ev_block,
-        unused_pf=(~any_empty) & (st.pf_flag[b, way] == 1),
-        pf_src=jnp.where(any_empty, PF_NONE, st.pf_src[b, way]))
+        block=jnp.where(any_empty, EMPTY, keys[way]),
+        unused_pf=(~any_empty) & (flags[way] == 1),
+        pf_src=jnp.where(any_empty, PF_NONE, srcs[way]))
 
-    st = st._replace(
-        key=st.key.at[b, way].set(block),
-        stamp=st.stamp.at[b, way].set(st.clock),
-        pf_flag=st.pf_flag.at[b, way].set(pf),
-        pf_sc=st.pf_sc.at[b, way].set(0),
-        pf_src=st.pf_src.at[b, way].set(src))
-    return st, ev
+    at = ways == way
+    rows = (jnp.where(at, block, keys), jnp.where(at, state.clock, stamps),
+            jnp.where(at, pf, flags), jnp.where(at, 0, scs),
+            jnp.where(at, src, srcs))
+    return rows, ev
 
 
-def access(state: CacheState, block: jax.Array, policy: str = "lru"):
+def _masked_rows(state: CacheState, b: jax.Array, rows, do: jax.Array):
+    """Select ``rows`` where ``do`` else the current bucket rows."""
+    old = (state.key[b], state.stamp[b], state.pf_flag[b],
+           state.pf_sc[b], state.pf_src[b])
+    return tuple(jnp.where(do, new, o) for new, o in zip(rows, old))
+
+
+def _set_bucket(state: CacheState, b: jax.Array, rows) -> CacheState:
+    key, stamp, flag, sc, src = rows
+    return state._replace(
+        key=state.key.at[b].set(key), stamp=state.stamp.at[b].set(stamp),
+        pf_flag=state.pf_flag.at[b].set(flag),
+        pf_sc=state.pf_sc.at[b].set(sc), pf_src=state.pf_src.at[b].set(src))
+
+
+def access(state: CacheState, block: jax.Array, policy: str = "lru",
+           enabled: jax.Array = True):
     """Demand access. Returns (state, hit, used_pf_src, evicted).
 
     On miss the block is demand-inserted. ``used_pf_src`` is the
     prefetcher id if this hit consumed a prefetched block (else PF_NONE).
+    Hit and miss both resolve to one row write per table in bucket ``b``.
+    With ``enabled=False`` the access is a bit-exact no-op reporting
+    ``(hit=False, PF_NONE, no-evict)`` — how the sweep engine freezes
+    exhausted trace lanes without a carry-wide select.
     """
-    state = state._replace(clock=state.clock + 1)
+    enabled = jnp.asarray(enabled)
+    state = state._replace(clock=state.clock + enabled.astype(jnp.int32))
     b = bucket_of(block, state.key.shape[0])
-    ways_hit = state.key[b] == block
+    keys = state.key[b]
+    ways_hit = keys == block
     hit = jnp.any(ways_hit)
     way = jnp.argmax(ways_hit).astype(jnp.int32)
+    at = jnp.arange(keys.shape[0]) == way
 
-    used_src = jnp.where(hit & (state.pf_flag[b, way] == 1),
+    used_src = jnp.where(enabled & hit & (state.pf_flag[b, way] == 1),
                          state.pf_src[b, way], PF_NONE)
 
-    def on_hit(st: CacheState):
-        stamp = (st.stamp.at[b, way].set(st.clock) if policy == "lru"
-                 else st.stamp)
-        st = st._replace(stamp=stamp,
-                         pf_flag=st.pf_flag.at[b, way].set(0),
-                         pf_src=st.pf_src.at[b, way].set(PF_NONE))
-        return st, _no_evict()
+    # hit: touch the way (LRU) and consume its prefetch flag
+    hit_stamp = (jnp.where(at, state.clock, state.stamp[b])
+                 if policy == "lru" else state.stamp[b])
+    hit_rows = (keys, hit_stamp,
+                jnp.where(at, 0, state.pf_flag[b]), state.pf_sc[b],
+                jnp.where(at, PF_NONE, state.pf_src[b]))
 
-    def on_miss(st: CacheState):
-        return _insert(st, block, jnp.int32(0), jnp.int32(PF_NONE))
+    # miss: demand-insert
+    ins_rows, ins_ev = _insert_rows(state, b, block, jnp.int32(0),
+                                    jnp.int32(PF_NONE))
 
-    state, ev = jax.lax.cond(hit, on_hit, on_miss, state)
-    return state, hit, used_src, ev
+    rows = tuple(jnp.where(hit, h, m) for h, m in zip(hit_rows, ins_rows))
+    no_ev = _no_evict()
+    ev = Evicted(*(jnp.where(enabled & ~hit, m, n)
+                   for n, m in zip(no_ev, ins_ev)))
+    return (_set_bucket(state, b, _masked_rows(state, b, rows, enabled)),
+            hit & enabled, used_src, ev)
 
 
 def insert_prefetch(state: CacheState, block: jax.Array, src: jax.Array,
                     enable: jax.Array):
     """Prefetch-insert ``block`` if enabled, valid and absent.
 
-    Returns (state, issued, evicted).
+    Returns (state, issued, evicted). A suppressed insert writes the
+    bucket rows back unchanged (bit-exact no-op, no ``lax.cond``).
     """
     do = enable & (block != EMPTY) & ~contains(state, block)
-
-    def ins(st: CacheState):
-        return _insert(st, block, jnp.int32(1), src)
-
-    state, ev = jax.lax.cond(do, ins, lambda st: (st, _no_evict()), state)
-    return state, do, ev
+    b = bucket_of(block, state.key.shape[0])
+    rows, ins_ev = _insert_rows(state, b, block, jnp.int32(1), src)
+    no_ev = _no_evict()
+    ev = Evicted(*(jnp.where(do, i, n) for i, n in zip(ins_ev, no_ev)))
+    return _set_bucket(state, b, _masked_rows(state, b, rows, do)), do, ev

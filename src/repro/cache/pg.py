@@ -6,6 +6,14 @@ block whose conditional probability cnt(h->x)/occ(h) exceeds a minimum
 chance. Bounded out-degree (LFU slot replacement) keeps the "comprehensive
 conditional probability matrix" (paper Sec. 5.3) inside a fixed metadata
 budget, which is exactly how the paper sizes PG against cache size.
+
+Like the MITHRIL record path, every update is in branchless scatter form
+(DESIGN.md §7): the found/create and hit/replace cases are computed
+unconditionally as row values, selected as scalars, and applied with one
+``.at[bucket, way].set(row)`` per table — no ``lax.cond``, so the vmapped
+sweep never copies the graph tables per request.
+``tests/test_record_scatter.py`` pins bit-equivalence to the frozen
+cond-form implementation.
 """
 
 from __future__ import annotations
@@ -15,9 +23,8 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.hashindex import EMPTY, choose_victim, probe
+from repro.core.hashindex import EMPTY, locate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,52 +61,64 @@ def init_pg(cfg: PgConfig) -> PgState:
         clock=jnp.zeros((), i32))
 
 
-def _upsert_node(cfg: PgConfig, st: PgState, node: jax.Array):
-    """Find or create the row for ``node``; returns (state, bucket, way)."""
-    b, way, found = probe(st.key, node, cfg.buckets)
-
-    def create(s: PgState):
-        v = choose_victim(s.key[b], s.age[b])
-        s = s._replace(
-            key=s.key.at[b, v].set(node),
-            nbr=s.nbr.at[b, v].set(jnp.full((cfg.out_degree,), EMPTY, jnp.int32)),
-            cnt=s.cnt.at[b, v].set(jnp.zeros((cfg.out_degree,), jnp.int32)),
-            occ=s.occ.at[b, v].set(0),
-            age=s.age.at[b, v].set(s.clock))
-        return s, v
-
-    st, way = lax.cond(found, lambda s: (s, way), create, st)
-    return st, b, way
-
-
 def _add_edge(cfg: PgConfig, st: PgState, src: jax.Array,
-              dst: jax.Array) -> PgState:
-    def upd(s: PgState) -> PgState:
-        s, b, w = _upsert_node(cfg, s, src)
-        slots = s.nbr[b, w]
-        hit = slots == dst
-        have = jnp.any(hit)
-        k_hit = jnp.argmax(hit).astype(jnp.int32)
-        k_new = jnp.argmin(s.cnt[b, w]).astype(jnp.int32)  # LFU replacement
-        k = jnp.where(have, k_hit, k_new)
-        return s._replace(
-            nbr=s.nbr.at[b, w, k].set(dst),
-            cnt=s.cnt.at[b, w, k].set(jnp.where(have, s.cnt[b, w, k] + 1, 1)))
+              dst: jax.Array, enabled: jax.Array = True) -> PgState:
+    """Reinforce src -> dst (upsert the src node, bump/claim an edge slot).
 
-    return lax.cond((src != EMPTY) & (src != dst), upd, lambda s: s, st)
+    One scatter per table at ``(b, w)``; with the guard false every slot
+    is written back with its old value (bit-exact no-op).
+    """
+    g = enabled & (src != EMPTY) & (src != dst)
+    b, w, found = locate(st.key, st.age, src, cfg.buckets)
+
+    # post-upsert row values (a created row starts empty)
+    nbr_row = jnp.where(found, st.nbr[b, w], EMPTY)
+    cnt_row = jnp.where(found, st.cnt[b, w], 0)
+
+    hit = nbr_row == dst
+    have = jnp.any(hit)
+    k_hit = jnp.argmax(hit).astype(jnp.int32)
+    k_new = jnp.argmin(cnt_row).astype(jnp.int32)   # LFU replacement
+    k = jnp.where(have, k_hit, k_new)
+    kk = jnp.arange(cfg.out_degree)
+    nbr_row = jnp.where(kk == k, dst, nbr_row)
+    cnt_row = jnp.where(kk == k, jnp.where(have, cnt_row + 1, 1), cnt_row)
+
+    create = g & ~found
+    return st._replace(
+        key=st.key.at[b, w].set(jnp.where(create, src, st.key[b, w])),
+        nbr=st.nbr.at[b, w].set(jnp.where(g, nbr_row, st.nbr[b, w])),
+        cnt=st.cnt.at[b, w].set(jnp.where(g, cnt_row, st.cnt[b, w])),
+        occ=st.occ.at[b, w].set(jnp.where(create, 0, st.occ[b, w])),
+        age=st.age.at[b, w].set(jnp.where(create, st.clock, st.age[b, w])))
 
 
-def pg_access(cfg: PgConfig, st: PgState,
-              block: jax.Array) -> Tuple[PgState, jax.Array]:
-    """Update graph with ``block`` and return (state, (max_prefetch,) cands)."""
-    st = st._replace(clock=st.clock + 1)
+def pg_access(cfg: PgConfig, st: PgState, block: jax.Array,
+              enabled: jax.Array = True) -> Tuple[PgState, jax.Array]:
+    """Update graph with ``block`` and return (state, (max_prefetch,) cands).
+
+    Self-contained per request — PG has no deferred phase, so unlike
+    ``mithril.record_event`` there is no follow-up call the caller owes.
+    ``enabled=False`` freezes the graph bit-for-bit (candidates are then
+    meaningless and must be discarded by the caller).
+    """
+    enabled = jnp.asarray(enabled)
+    st = st._replace(clock=st.clock + enabled.astype(jnp.int32))
     # reinforce edges from the last `window` blocks to this one
     for i in range(cfg.window):
-        st = _add_edge(cfg, st, st.hist[i], block)
-    # bump occurrence count for this block's node
-    st, b, w = _upsert_node(cfg, st, block)
-    st = st._replace(occ=st.occ.at[b, w].add(1),
-                     age=st.age.at[b, w].set(st.clock))
+        st = _add_edge(cfg, st, st.hist[i], block, enabled)
+    # upsert this block's node and bump its occurrence count
+    b, w, found = locate(st.key, st.age, block, cfg.buckets)
+    st = st._replace(
+        key=st.key.at[b, w].set(jnp.where(enabled, block, st.key[b, w])),
+        nbr=st.nbr.at[b, w].set(
+            jnp.where(enabled & ~found, EMPTY, st.nbr[b, w])),
+        cnt=st.cnt.at[b, w].set(
+            jnp.where(enabled & ~found, 0, st.cnt[b, w])),
+        occ=st.occ.at[b, w].set(
+            jnp.where(enabled, jnp.where(found, st.occ[b, w], 0) + 1,
+                      st.occ[b, w])),
+        age=st.age.at[b, w].set(jnp.where(enabled, st.clock, st.age[b, w])))
 
     # candidates: successors with cnt/occ >= min_chance, top-by-count
     counts, nbrs = st.cnt[b, w], st.nbr[b, w]
@@ -115,5 +134,6 @@ def pg_access(cfg: PgConfig, st: PgState,
     out = jnp.stack(cands)
 
     # slide history ring
-    hist = jnp.concatenate([st.hist[1:], block[None]])
+    hist = jnp.where(enabled,
+                     jnp.concatenate([st.hist[1:], block[None]]), st.hist)
     return st._replace(hist=hist), out

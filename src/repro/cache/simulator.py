@@ -80,12 +80,12 @@ class SimResult(NamedTuple):
         return float(self.stats.pf_used[src]) / issued if issued else float("nan")
 
 
-def _apply_prefetches(cfg, cache, stats, cands, src):
+def _apply_prefetches(cfg, cache, stats, cands, src, enable):
     """Insert a fixed-length candidate vector; collect eviction feedback."""
     ev_blocks, ev_unused, ev_srcs = [], [], []
     for i in range(cands.shape[0]):
         cache, issued, ev = base.insert_prefetch(
-            cache, cands[i], jnp.int32(src), jnp.array(True))
+            cache, cands[i], jnp.int32(src), enable)
         stats = stats._replace(
             pf_issued=stats.pf_issued.at[src].add(issued.astype(jnp.int32)),
             pf_evicted_unused=stats.pf_evicted_unused.at[ev.pf_src].add(
@@ -102,19 +102,23 @@ def build_segments(cfg: SimConfig):
 
     Returns ``(init_carry, segments)`` where ``segments`` is a list of
     ``(fn, mine_after)`` pairs and each ``fn(carry, block, aux)`` returns
-    ``(carry, aux)``. ``aux`` threads per-request values (``hit``,
-    ``used_src``, the demand eviction) between segments. ``mine_after=True``
-    marks a point where a MITHRIL recording event may have filled the
-    mining table, so the mining trigger must run before the next segment.
+    ``(carry, aux)``. ``aux`` threads per-request values (``valid``,
+    ``hit``, ``used_src``, the demand eviction) between segments.
+    ``mine_after=True`` marks a point where a MITHRIL recording event may
+    have filled the mining table, so the mining trigger —
+    ``mithril.maybe_mine`` per lane in the serial ``build_step``, the
+    batch-level barrier in ``sweep.py`` — MUST run before the next
+    segment (the record/maybe_mine contract of ``core.mithril``).
 
-    The split exists for the batched sweep engine (``sweep.py``): under
-    ``vmap`` a per-lane ``lax.cond`` lowers to a select that executes both
-    branches on every request, which would run the expensive mining pass
-    every step. Keeping mine sites *between* segments lets the batched
-    step vmap the cheap segments and guard one batch-level mining check
-    with a real ``lax.cond``. The serial ``build_step`` composes the same
-    segments with a per-lane ``mithril.maybe_mine`` at each barrier, which
-    is bit-identical to triggering inside ``record``.
+    The split exists for the batched sweep engine (``sweep.py``): the
+    segments are branchless scatter updates (DESIGN.md §7), safe to vmap
+    with no whole-table copies, while the (rare, expensive) mining pass
+    stays *between* segments where the batched step guards it with one
+    batch-level ``lax.cond``. ``aux["valid"]`` gates every state write at
+    source — an invalid (padded-tail) request is a bit-exact no-op — so
+    neither step builder needs a carry-wide select. The serial
+    ``build_step`` passes ``valid=True`` and is bit-identical to
+    triggering mining inside ``record``.
     """
     rec_on = cfg.mithril.record_on
 
@@ -133,9 +137,11 @@ def build_segments(cfg: SimConfig):
 
     def seg_access(carry, block, aux):
         """Demand access + hit/eviction statistics."""
+        valid = aux["valid"]
         cache, stats = carry["cache"], carry["stats"]
-        stats = stats._replace(requests=stats.requests + 1)
-        cache, hit, used_src, ev = base.access(cache, block, cfg.policy)
+        stats = stats._replace(requests=stats.requests + valid.astype(jnp.int32))
+        cache, hit, used_src, ev = base.access(cache, block, cfg.policy,
+                                               enabled=valid)
         stats = stats._replace(
             hits=stats.hits + hit.astype(jnp.int32),
             pf_used=stats.pf_used.at[used_src].add(
@@ -144,29 +150,29 @@ def build_segments(cfg: SimConfig):
                 ev.unused_pf.astype(jnp.int32)))
         out = dict(carry)
         out["cache"], out["stats"] = cache, stats
-        return out, {"hit": hit, "used_src": used_src, "ev": ev}
+        return out, {**aux, "hit": hit, "used_src": used_src, "ev": ev}
 
     def seg_record_miss(carry, block, aux):
-        mith = lax.cond(~aux["hit"],
-                        functools.partial(mithril.record_event, cfg.mithril,
-                                          block=block),
-                        lambda s: s, carry["mith"])
+        # branchless gate: a disabled record event is a bit-exact no-op,
+        # so no lax.cond (which vmap would lower to whole-table selects)
+        mith = mithril.record_event(cfg.mithril, carry["mith"], block,
+                                    enabled=aux["valid"] & ~aux["hit"])
         return {**carry, "mith": mith}, aux
 
     def seg_record_evict(carry, block, aux):
         ev = aux["ev"]
-        mith = lax.cond(ev.block != EMPTY,
-                        functools.partial(mithril.record_event, cfg.mithril,
-                                          block=ev.block),
-                        lambda s: s, carry["mith"])
+        mith = mithril.record_event(cfg.mithril, carry["mith"], ev.block,
+                                    enabled=ev.block != EMPTY)
         return {**carry, "mith": mith}, aux
 
     def seg_record_all(carry, block, aux):
-        mith = mithril.record_event(cfg.mithril, carry["mith"], block)
+        mith = mithril.record_event(cfg.mithril, carry["mith"], block,
+                                    enabled=aux["valid"])
         return {**carry, "mith": mith}, aux
 
     def seg_prefetch(carry, block, aux):
         """Prefetch issue for every enabled layer (no mining in here)."""
+        valid = aux["valid"]
         cache, stats = carry["cache"], carry["stats"]
         used_src, ev = aux["used_src"], aux["ev"]
         out = dict(carry)
@@ -175,29 +181,32 @@ def build_segments(cfg: SimConfig):
         if cfg.use_mithril:
             cands = mithril.lookup(cfg.mithril, carry["mith"], block)
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
-                                                PF_MITHRIL)
+                                                PF_MITHRIL, valid)
 
         # AMP sequential prefetching + degree feedback
         if cfg.use_amp:
-            amp = carry["amp"]
-            amp = amp_feedback_used(cfg.amp, amp, block, used_src == PF_AMP)
+            amp0 = carry["amp"]
+            amp = amp_feedback_used(cfg.amp, amp0, block, used_src == PF_AMP)
             amp, vec = amp_access(cfg.amp, amp, block)
             cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec,
-                                                  PF_AMP)
+                                                  PF_AMP, valid)
             evb, evu, evsrc = evs
             for i in range(evb.shape[0]):
                 amp = amp_feedback_evicted(cfg.amp, amp, evb[i],
                                            evu[i] & (evsrc[i] == PF_AMP))
             amp = amp_feedback_evicted(cfg.amp, amp, ev.block,
                                        ev.unused_pf & (ev.pf_src == PF_AMP))
-            out["amp"] = amp
+            # AMP has no enabled gate; its state is a handful of (NS,)
+            # vectors, so an invalid request selects the old subtree
+            out["amp"] = jax.tree_util.tree_map(
+                functools.partial(jnp.where, valid), amp, amp0)
 
         # probability graph
         if cfg.use_pg:
             pg = carry["pg"]
-            pg, cands = pg_access(cfg.pg, pg, block)
+            pg, cands = pg_access(cfg.pg, pg, block, enabled=valid)
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
-                                                PF_PG)
+                                                PF_PG, valid)
             out["pg"] = pg
 
         out["cache"], out["stats"] = cache, stats
@@ -216,11 +225,16 @@ def build_segments(cfg: SimConfig):
 
 
 def build_step(cfg: SimConfig):
-    """Returns (init_carry, step) for lax.scan over a block trace."""
+    """Returns (init_carry, step) for lax.scan over a block trace.
+
+    Serial composition of ``build_segments`` with the per-lane
+    ``mithril.maybe_mine`` trigger at every mining barrier — the
+    record/maybe_mine contract in its one-lane form.
+    """
     init_carry, segments = build_segments(cfg)
 
     def step(carry, block):
-        aux = {}
+        aux = {"valid": jnp.array(True)}
         for fn, mine_after in segments:
             carry, aux = fn(carry, block, aux)
             if mine_after:

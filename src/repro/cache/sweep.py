@@ -11,20 +11,26 @@ compute-bound. This module instead
 * scans over fixed-size time *chunks* so peak memory is bounded by
   ``chunk * n_traces`` and arbitrarily long traces stream through the
   same compiled executable, and
-* masks padded tails per trace so statistics are bit-identical to the
+* gates padded tails per trace so statistics are bit-identical to the
   per-trace ``simulate`` (``tests/test_sweep.py`` asserts this).
 
-Batching invariants (DESIGN.md §6):
+Batching invariants (DESIGN.md §6–§7):
 
-* the per-lane step is pure integer arithmetic, so the both-branches
-  ``select`` that ``vmap`` lowers ``lax.cond`` to is bit-exact;
+* the per-lane step is branchless scatter-form integer arithmetic (no
+  ``lax.cond`` / ``lax.switch`` anywhere in the request path), so
+  ``vmap`` lowers it to batched scatters — never to the whole-table
+  select copies that cond lowering produces;
 * the one expensive rare branch — the MITHRIL mining pass — is hoisted
   out of the vmapped step via the segment barriers of
   ``simulator.build_segments`` and guarded by a *batch-level*
-  ``lax.cond`` (``jnp.any(need)``), so it only executes when some live
-  lane actually filled its mining table;
-* padded-tail requests select the previous carry wholesale, so an
-  exhausted lane can neither change state nor trigger mining.
+  ``lax.cond`` (``jnp.any(need)``) around the fused
+  ``mithril.mine_batched`` (one Pallas launch over all lanes on TPU), so
+  it only executes when some live lane actually filled its mining table
+  — callers of ``record_event`` owe that barrier before the next record
+  (the record/maybe_mine contract);
+* padded-tail requests carry ``valid=False`` into every segment, whose
+  scatter updates then write back old values — an exhausted lane can
+  neither change state, contribute to statistics, nor trigger mining.
 """
 
 from __future__ import annotations
@@ -67,22 +73,37 @@ def pad_traces(traces: Union[Mapping[str, np.ndarray],
     return PaddedSuite(names, blocks, lengths)
 
 
-def _mask(valid: jax.Array, new, old):
-    """Per-lane select: keep ``new`` where valid, else ``old``."""
-    sel = valid.reshape(valid.shape + (1,) * (new.ndim - valid.ndim))
-    return jnp.where(sel, new, old)
+def _batched_pairwise_fn():
+    """Pairwise-check implementations for the batched mining barrier.
+
+    Returns ``(batched_fn, serial_fn)`` for ``mithril.mine_batched``: on
+    TPU the lanes-axis Pallas kernel covers every mining lane with one
+    launch (grid over (lane, row-block) — DESIGN.md §7) and the
+    row-block kernel serves the single-flagged-lane fast path; elsewhere
+    the pure-jnp oracles are faster than interpreted kernels, so
+    ``(None, None)`` defers to ``mine_batched``'s defaults. Kernel and
+    oracle are bit-identical (``tests/test_kernels.py``).
+    """
+    from repro.kernels.backend import on_tpu
+    if not on_tpu():
+        return None, None
+    from repro.kernels.ops import mithril_pairwise, mithril_pairwise_batched
+    return mithril_pairwise_batched, mithril_pairwise
 
 
 def build_batched_step(cfg: SimConfig):
     """Returns (init_batched, step) for a scan over (chunk, B) request slabs.
 
     ``step(carry, (blocks, valid))`` advances every trace lane by one
-    request: the cheap segments run under ``vmap``, each mining barrier
-    runs one batch-level ``lax.cond`` (vmapped mine selected per lane),
-    and invalid (padded) lanes keep their previous carry bit-for-bit.
+    request: the branchless scatter-form segments run under ``vmap``,
+    each mining barrier runs one batch-level ``lax.cond`` around the
+    fused ``mithril.mine_batched``, and invalid (padded) lanes keep
+    their previous carry bit-for-bit.
     """
     init_carry, segments = build_segments(cfg)
     mine_rows = cfg.mithril.mine_rows
+    pairwise_fn, serial_pairwise_fn = (
+        _batched_pairwise_fn() if cfg.use_mithril else (None, None))
 
     def init_batched(batch_size: int):
         return jax.vmap(lambda _: init_carry())(jnp.arange(batch_size))
@@ -90,37 +111,34 @@ def build_batched_step(cfg: SimConfig):
     def batched_maybe_mine(mith, valid):
         """Mine exactly the lanes whose table filled this step.
 
-        This runs at batch level — *outside* vmap — so ``lax.cond`` is a
-        real runtime conditional, not a select: total mining work stays
-        equal to the serial per-lane sum (a vmapped mine here would cost
-        O(B) per trigger and O(B^2) per sweep).
+        This runs at batch level — *outside* vmap — so the outer
+        ``lax.cond`` is a real runtime conditional: on the (rare)
+        triggering steps, ``mithril.mine_batched`` runs one fused
+        association search over ALL lanes (one Pallas launch on TPU)
+        and folds pairs in with vmapped scatter updates; lanes with
+        ``need=False`` select their previous state bit-for-bit. On every
+        other step the barrier costs one predicate reduction.
         """
         need = (mith.mine_fill >= mine_rows) & valid
-        mine_fn = functools.partial(mithril.mine, cfg.mithril)
-
-        def mine_lane(i, m):
-            lane = jax.tree_util.tree_map(lambda x: x[i], m)
-            mined = lax.cond(need[i], mine_fn, lambda s: s, lane)
-            return jax.tree_util.tree_map(
-                lambda x, v: x.at[i].set(v), m, mined)
-
         return lax.cond(
             jnp.any(need),
-            lambda m: lax.fori_loop(0, need.shape[0], mine_lane, m),
+            lambda m: mithril.mine_batched(
+                cfg.mithril, m, need, pairwise_fn=pairwise_fn,
+                serial_pairwise_fn=serial_pairwise_fn),
             lambda m: m, mith)
 
     def step(carry, xs):
         block, valid = xs
-        new, aux = carry, {}
+        # padded tails: aux["valid"] gates every state write at source
+        # (scatter-form no-ops), so ended lanes keep their carry with no
+        # carry-wide select — the old whole-table copy per step
+        new, aux = carry, {"valid": valid}
         for fn, mine_after in segments:
             new, aux = jax.vmap(fn)(new, block, aux)
             if mine_after:
                 new = {**new,
                        "mith": batched_maybe_mine(new["mith"], valid)}
-        # padded tails: discard every intra-step change for ended lanes
-        new = jax.tree_util.tree_map(
-            functools.partial(_mask, valid), new, carry)
-        return new, aux["hit"] & valid
+        return new, aux["hit"]
 
     return init_batched, step
 
@@ -188,9 +206,14 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
     """Run a (B, T) padded trace batch through one configuration.
 
     ``lengths`` gives each trace's valid prefix (default: full T).
-    Requests past a trace's length are masked no-ops excluded from all
-    statistics. Time is padded up to a chunk multiple so every chunk has
-    the same shape — one compilation serves the whole stream.
+    Requests past a trace's length are bit-exact no-ops excluded from
+    all statistics (source-gated, DESIGN.md §6). Time is padded up to a
+    chunk multiple so every chunk has the same shape — one compilation
+    serves the whole stream. Results are bit-identical to running each
+    trace through ``simulate`` serially; the record/maybe_mine contract
+    (``core.mithril``) is honored internally via the batch-level mining
+    barriers of ``build_batched_step`` — callers never interleave their
+    own recording with a sweep's.
     """
     import time
 

@@ -56,3 +56,18 @@ def choose_victim(keys_row: jax.Array, age_row: jax.Array) -> jax.Array:
     first_empty = jnp.argmax(empty).astype(jnp.int32)
     oldest = jnp.argmin(age_row).astype(jnp.int32)
     return jnp.where(any_empty, first_empty, oldest)
+
+
+def locate(keys: jax.Array, ages: jax.Array, key: jax.Array, n_buckets: int):
+    """Branchless find-or-allocate: (bucket, way, found).
+
+    ``way`` is the hit way when ``found``, else the victim way the caller
+    should overwrite. Both candidates are computed unconditionally and
+    selected as scalars, so the scatter-form table updates (DESIGN.md §7)
+    can address one (bucket, way) slot with no ``lax.cond`` — under
+    ``vmap`` that lowers to a batched scatter instead of a whole-table
+    select copy.
+    """
+    b, way, found = probe(keys, key, n_buckets)
+    victim = choose_victim(keys[b], ages[b])
+    return b, jnp.where(found, way, victim), found

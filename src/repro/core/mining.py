@@ -22,6 +22,7 @@ Association semantics (paper Fig. 2 + Alg. 1):
 
 from __future__ import annotations
 
+import functools
 from typing import List, Tuple
 
 import jax
@@ -91,20 +92,13 @@ def select_pairs(code: jax.Array) -> jax.Array:
     return (code == 2) | (is_first & any_assoc)
 
 
-def associations_dense(blocks: jax.Array, ts: jax.Array, cnt: jax.Array,
-                       min_support: int, max_support: int, delta: int,
-                       window: int, max_pairs: int,
-                       pairwise_fn=pairwise_codes):
-    """Full vectorized mining: returns (src, dst, valid_mask, n_dropped).
+def _emit_pairs(blk: jax.Array, code: jax.Array, max_pairs: int):
+    """Alg. 2 selection + compaction: codes (N, W) -> (src, dst, valid, dropped).
 
     Pairs are compacted to ``max_pairs`` in the paper's discovery order
-    (source-row-major, then ascending distance). ``pairwise_fn`` is
-    swappable so the Pallas kernel can slot in for the hot inner loop.
+    (source-row-major, then ascending distance).
     """
-    blk, tss, cnts, valid = sort_by_first_ts(blocks, ts, cnt, min_support, max_support)
-    code = pairwise_fn(tss, cnts, valid, delta, window)
     mask = select_pairs(code)
-
     n, w = mask.shape
     idx_j = jnp.minimum(jnp.arange(n)[:, None] + jnp.arange(1, w + 1)[None, :], n - 1)
     src = jnp.broadcast_to(blk[:, None], (n, w)).reshape(-1)
@@ -115,6 +109,56 @@ def associations_dense(blocks: jax.Array, ts: jax.Array, cnt: jax.Array,
     order = jnp.argsort(~flat, stable=True)[:max_pairs]
     return (src[order], dst[order], flat[order],
             jnp.maximum(jnp.sum(flat) - max_pairs, 0))
+
+
+def associations_dense(blocks: jax.Array, ts: jax.Array, cnt: jax.Array,
+                       min_support: int, max_support: int, delta: int,
+                       window: int, max_pairs: int,
+                       pairwise_fn=pairwise_codes):
+    """Full vectorized mining: returns (src, dst, valid_mask, n_dropped).
+
+    ``pairwise_fn`` is swappable so the Pallas kernel can slot in for the
+    hot inner loop (``kernels.ops.mithril_pairwise``).
+    """
+    blk, tss, cnts, valid = sort_by_first_ts(blocks, ts, cnt, min_support, max_support)
+    code = pairwise_fn(tss, cnts, valid, delta, window)
+    return _emit_pairs(blk, code, max_pairs)
+
+
+# ---------------------------------------------------------------------------
+# Batched (lanes-axis) variant for the sweep engine's mining barrier
+# ---------------------------------------------------------------------------
+
+def pairwise_codes_batched(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
+                           delta: int, window: int) -> jax.Array:
+    """Batched ``pairwise_codes``: (L, N, S) x (L, N) x (L, N) -> (L, N, W).
+
+    Pure-jnp oracle for the batched Pallas kernel
+    (``kernels.mithril_mine_batched``, grid over (lane, row-block));
+    integer ops, so per-lane results are bit-identical to the serial
+    ``pairwise_codes``.
+    """
+    return jax.vmap(
+        lambda t, c, v: pairwise_codes(t, c, v, delta, window))(ts, cnt, valid)
+
+
+def associations_dense_batched(blocks: jax.Array, ts: jax.Array,
+                               cnt: jax.Array, min_support: int,
+                               max_support: int, delta: int, window: int,
+                               max_pairs: int, pairwise_fn=None):
+    """``associations_dense`` over a leading lanes axis, with ONE fused
+    pairwise pass: sort and pair emission are vmapped (cheap integer
+    ops), while ``pairwise_fn`` — the compute hot-spot — receives the
+    whole (L, N, S) stack in a single call so a batched Pallas kernel
+    can cover every lane with one launch.
+    """
+    fn = pairwise_fn or pairwise_codes_batched
+    blk, tss, cnts, valid = jax.vmap(functools.partial(
+        sort_by_first_ts, min_support=min_support,
+        max_support=max_support))(blocks, ts, cnt)
+    code = fn(tss, cnts, valid, delta, window)
+    return jax.vmap(functools.partial(_emit_pairs, max_pairs=max_pairs))(
+        blk, code)
 
 
 # ---------------------------------------------------------------------------

@@ -7,12 +7,36 @@ Public API (all pure, jit/scan-safe):
     cand  = lookup(cfg, state, block)            # pFlag path; (P,) block ids or EMPTY
     state, cand = access(cfg, state, block, do_record, do_lookup)
     state = mine(cfg, state)                     # usually triggered by record()
+    states = mine_batched(cfg, states, need)     # lanes-axis mine for the sweep
 
 The recording table is set-associative with in-bucket storage; migration to
 the mining table happens when a block accumulates ``min_support`` timestamps;
 a full mining table triggers ``mine`` which writes discovered associations
 into the prefetching table (Sec. 4.2). ``pairwise_fn`` lets the Pallas
 kernel replace the dense association check.
+
+Record/mine split contract
+--------------------------
+``record_event`` advances the recording/mining tables but NEVER runs the
+mining procedure; callers MUST call :func:`maybe_mine` before the next
+recording event. The mining table holds at most ``mine_rows`` rows and the
+migration scatter relies on ``mine_fill < mine_rows`` at entry. ``record``
+composes the two for serial callers; the batched sweep engine
+(``cache/sweep.py``) keeps them apart so mining can run at batch level.
+
+Branchless scatter form (DESIGN.md §7)
+--------------------------------------
+The record/association hot path used to dispatch through ``lax.cond`` /
+``lax.switch``. Under ``vmap`` those lower to selects that copy every
+recording/prefetch table per lane per request — the overhead-vs-benefit
+trap the paper's cost argument (Sec. 4.2) exists to avoid. The functions
+below instead compute the (bucket, way, row-value) updates for every case
+unconditionally, select between the *scalars/rows*, and apply exactly one
+``.at[bucket, way].set(row)`` scatter per table. A disabled event writes
+each slot's old value back — bit-identical to not running at all — which
+is what lets ``simulator.py`` drop its per-segment ``lax.cond`` wrappers.
+``tests/test_record_scatter.py`` asserts per-event bit-equivalence against
+a frozen copy of the cond/switch implementation.
 """
 
 from __future__ import annotations
@@ -25,8 +49,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from .config import MithrilConfig
-from .hashindex import EMPTY, choose_victim, probe
-from .mining import associations_dense, pairwise_codes
+from .hashindex import EMPTY, locate, probe
+from .mining import (associations_dense, associations_dense_batched,
+                     pairwise_codes, pairwise_codes_batched)
 from .state import MithrilState, init_state
 
 init = init_state
@@ -37,7 +62,11 @@ init = init_state
 # ---------------------------------------------------------------------------
 
 def lookup(cfg: MithrilConfig, state: MithrilState, block: jax.Array) -> jax.Array:
-    """Return up to P prefetch candidates for ``block`` (EMPTY-padded)."""
+    """Return up to P prefetch candidates for ``block`` (EMPTY-padded).
+
+    Pure read (pFlag path): never touches state, so it needs no mining
+    barrier and may be called at any point of the record/maybe_mine cycle.
+    """
     b, way, found = probe(state.pf_key, block, cfg.pf_buckets)
     vals = state.pf_vals[b, way]
     return jnp.where(found, vals, jnp.full((cfg.prefetch_list,), EMPTY, jnp.int32))
@@ -46,63 +75,49 @@ def lookup(cfg: MithrilConfig, state: MithrilState, block: jax.Array) -> jax.Arr
 def add_association(cfg: MithrilConfig, state: MithrilState,
                     src: jax.Array, dst: jax.Array,
                     valid: jax.Array) -> MithrilState:
-    """Insert association src -> dst (FIFO within the P-slot list)."""
+    """Insert association src -> dst (FIFO within the P-slot list).
 
-    def do_add(st: MithrilState) -> MithrilState:
-        b, way, found = probe(st.pf_key, src, cfg.pf_buckets)
+    Branchless scatter form: the update-existing / insert-new / invalid
+    cases all reduce to one row write per prefetch-table array at
+    ``(bucket, way)``. With ``valid=False`` every slot is written back
+    with its old value (bit-exact no-op), so the mining scan needs no
+    per-pair ``lax.cond``.
+    """
+    i32 = jnp.int32
+    b, w, found = locate(state.pf_key, state.pf_age, src, cfg.pf_buckets)
+    upd = valid & found           # existing source row
+    new = valid & ~found          # allocate (or evict into) a fresh row
 
-        def update_existing(s: MithrilState) -> MithrilState:
-            already = jnp.any(s.pf_vals[b, way] == dst)
-            pos = jnp.mod(s.pf_cnt[b, way], cfg.prefetch_list)
-            vals = s.pf_vals.at[b, way, pos].set(
-                jnp.where(already, s.pf_vals[b, way, pos], dst))
-            cnt = s.pf_cnt.at[b, way].add(jnp.where(already, 0, 1))
-            # touch the entry age: a re-mined source is hot, and without
-            # the refresh choose_victim evicts exactly the hottest sources
-            # first (they have the oldest insertion timestamps)
-            age = s.pf_age.at[b, way].set(s.ts)
-            return s._replace(pf_vals=vals, pf_cnt=cnt, pf_age=age,
-                              n_pairs=s.n_pairs + jnp.where(already, 0, 1))
+    old_key, old_vals = state.pf_key[b, w], state.pf_vals[b, w]
+    old_cnt, old_age = state.pf_cnt[b, w], state.pf_age[b, w]
 
-        def insert_new(s: MithrilState) -> MithrilState:
-            v = choose_victim(s.pf_key[b], s.pf_age[b])
-            fresh = jnp.full((cfg.prefetch_list,), EMPTY, jnp.int32).at[0].set(dst)
-            return s._replace(
-                pf_key=s.pf_key.at[b, v].set(src),
-                pf_vals=s.pf_vals.at[b, v].set(fresh),
-                pf_cnt=s.pf_cnt.at[b, v].set(1),
-                pf_age=s.pf_age.at[b, v].set(s.ts),
-                n_pairs=s.n_pairs + 1,
-            )
+    already = upd & jnp.any(old_vals == dst)        # duplicate destination
+    pos = jnp.mod(old_cnt, cfg.prefetch_list)       # FIFO ring slot
+    kp = jnp.arange(cfg.prefetch_list)
+    vals_upd = jnp.where((kp == pos) & ~already, dst, old_vals)
+    vals_new = jnp.where(kp == 0, dst, EMPTY)
+    stored = (upd & ~already) | new                 # a pair actually landed
 
-        return lax.cond(found, update_existing, insert_new, st)
-
-    return lax.cond(valid, do_add, lambda st: st, state)
+    return state._replace(
+        pf_key=state.pf_key.at[b, w].set(jnp.where(new, src, old_key)),
+        pf_vals=state.pf_vals.at[b, w].set(
+            jnp.where(upd, vals_upd, jnp.where(new, vals_new, old_vals))),
+        pf_cnt=state.pf_cnt.at[b, w].set(
+            jnp.where(new, 1, old_cnt + (upd & ~already).astype(i32))),
+        # touch the entry age on every valid update: a re-mined source is
+        # hot, and without the refresh choose_victim evicts exactly the
+        # hottest sources first (oldest insertion timestamps)
+        pf_age=state.pf_age.at[b, w].set(jnp.where(valid, state.ts, old_age)),
+        n_pairs=state.n_pairs + stored.astype(i32),
+    )
 
 
 # ---------------------------------------------------------------------------
 # Mining
 # ---------------------------------------------------------------------------
 
-def mine(cfg: MithrilConfig, state: MithrilState,
-         pairwise_fn: Optional[Callable] = None) -> MithrilState:
-    """Run the mining procedure and fold associations into the prefetch table."""
-    fn = pairwise_fn or pairwise_codes
-    src, dst, valid, dropped = associations_dense(
-        state.mine_block, state.mine_ts, state.mine_cnt,
-        cfg.min_support, cfg.max_support, cfg.lookahead,
-        cfg.window, cfg.pairs_cap, pairwise_fn=fn)
-
-    def body(st: MithrilState, xs):
-        s, d, v = xs
-        st = add_association(cfg, st, s, d, v)
-        if cfg.symmetric:  # beyond-paper: bidirectional edges (DESIGN.md)
-            st = add_association(cfg, st, d, s, v)
-        return st, None
-
-    state, _ = lax.scan(body, state, (src, dst, valid))
-
-    # clear the mining table and drop stale recording-index pointers into it
+def _clear_after_mine(state: MithrilState, dropped: jax.Array) -> MithrilState:
+    """Clear the mining table and drop stale recording-index pointers."""
     return state._replace(
         rec_key=jnp.where(state.rec_loc == 1, EMPTY, state.rec_key),
         rec_loc=jnp.zeros_like(state.rec_loc),
@@ -115,89 +130,190 @@ def mine(cfg: MithrilConfig, state: MithrilState,
     )
 
 
+def _fold_pairs(cfg: MithrilConfig, state: MithrilState, src, dst, valid,
+                dropped) -> MithrilState:
+    """Scan discovered pairs into the prefetch table, then clear."""
+    def body(st: MithrilState, xs):
+        s, d, v = xs
+        st = add_association(cfg, st, s, d, v)
+        if cfg.symmetric:  # beyond-paper: bidirectional edges (DESIGN.md §3)
+            st = add_association(cfg, st, d, s, v)
+        return st, None
+
+    state, _ = lax.scan(body, state, (src, dst, valid))
+    return _clear_after_mine(state, dropped)
+
+
+def mine(cfg: MithrilConfig, state: MithrilState,
+         pairwise_fn: Optional[Callable] = None) -> MithrilState:
+    """Run the mining procedure and fold associations into the prefetch table.
+
+    ``pairwise_fn`` (per-lane ``(N,S)`` contract of
+    ``mining.pairwise_codes``) lets the Pallas kernel replace the dense
+    association check.
+    """
+    fn = pairwise_fn or pairwise_codes
+    src, dst, valid, dropped = associations_dense(
+        state.mine_block, state.mine_ts, state.mine_cnt,
+        cfg.min_support, cfg.max_support, cfg.lookahead,
+        cfg.window, cfg.pairs_cap, pairwise_fn=fn)
+    return _fold_pairs(cfg, state, src, dst, valid, dropped)
+
+
+def mine_batched(cfg: MithrilConfig, states: MithrilState, need: jax.Array,
+                 pairwise_fn: Optional[Callable] = None,
+                 serial_pairwise_fn: Optional[Callable] = None
+                 ) -> MithrilState:
+    """Mine every lane flagged in ``need``; other lanes are untouched.
+
+    ``states`` is a stacked :class:`MithrilState` with a leading ``(B,)``
+    lanes axis (the sweep engine's carry); ``need`` is a ``(B,)`` bool.
+    Per-lane results are bit-identical to calling :func:`mine` on
+    exactly the needed lanes (``tests/test_record_scatter.py``,
+    ``tests/test_sweep.py``). Two paths behind a batch-level
+    ``lax.cond`` (a real runtime conditional — this function is meant to
+    be called *outside* any vmap):
+
+    * exactly ONE lane flagged — the common case when unsynchronized
+      trace lanes fill their tables at their own pace — extracts that
+      lane, runs the serial :func:`mine` (with ``serial_pairwise_fn``,
+      e.g. the row-block Pallas kernel ``kernels.ops.mithril_pairwise``
+      on TPU), and scatters it back: O(1) mining work per trigger
+      regardless of the batch width;
+    * several lanes flagged: one fused pass over ALL lanes —
+      ``pairwise_fn`` takes the batched ``(B, N, S)`` contract of
+      ``mining.pairwise_codes_batched``, which the Pallas kernel
+      ``kernels.ops.mithril_pairwise_batched`` implements with one grid
+      over (lane, row-block) — then a vmapped scan of the scatter-form
+      :func:`add_association` folds pairs in, and lanes with
+      ``need=False`` select their previous state wholesale.
+    """
+    fn = pairwise_fn or pairwise_codes_batched
+
+    def one_lane(sts: MithrilState) -> MithrilState:
+        i = jnp.argmax(need).astype(jnp.int32)
+        lane = jax.tree_util.tree_map(lambda x: x[i], sts)
+        mined = mine(cfg, lane, pairwise_fn=serial_pairwise_fn)
+        return jax.tree_util.tree_map(lambda x, v: x.at[i].set(v),
+                                      sts, mined)
+
+    def fused(sts: MithrilState) -> MithrilState:
+        src, dst, valid, dropped = associations_dense_batched(
+            sts.mine_block, sts.mine_ts, sts.mine_cnt,
+            cfg.min_support, cfg.max_support, cfg.lookahead,
+            cfg.window, cfg.pairs_cap, pairwise_fn=fn)
+        mined = jax.vmap(functools.partial(_fold_pairs, cfg))(
+            sts, src, dst, valid, dropped)
+
+        def sel(new, old):
+            nd = need.reshape(need.shape + (1,) * (new.ndim - need.ndim))
+            return jnp.where(nd, new, old)
+
+        return jax.tree_util.tree_map(sel, mined, sts)
+
+    return lax.cond(jnp.sum(need.astype(jnp.int32)) == 1,
+                    one_lane, fused, states)
+
+
 # ---------------------------------------------------------------------------
-# Recording
+# Recording (branchless scatter form — DESIGN.md §7)
 # ---------------------------------------------------------------------------
 
-def _migrate(cfg: MithrilConfig, st: MithrilState, block: jax.Array,
-             b: jax.Array, way: jax.Array, ts_row: jax.Array) -> MithrilState:
-    """Move a mining-ready row into the mining table (invariant: not full)."""
-    row = st.mine_fill
-    mine_ts = st.mine_ts.at[row, : cfg.min_support].set(ts_row)
-    return st._replace(
-        mine_block=st.mine_block.at[row].set(block),
-        mine_ts=mine_ts,
-        mine_cnt=st.mine_cnt.at[row].set(cfg.min_support),
-        mine_fill=row + 1,
-        rec_loc=st.rec_loc.at[b, way].set(1),
-        rec_row=st.rec_row.at[b, way].set(row),
-    )
-
-
-def _record_event(cfg: MithrilConfig, state: MithrilState,
-                  block: jax.Array) -> MithrilState:
-    ts = state.ts
-    b, way, found = probe(state.rec_key, block, cfg.rec_buckets)
-    in_mine = state.rec_loc[b, way] == 1
-
-    def case_new(st: MithrilState) -> MithrilState:
-        v = choose_victim(st.rec_key[b], st.rec_age[b])
-        fresh = jnp.zeros((cfg.min_support,), jnp.int32).at[0].set(ts)
-        st = st._replace(
-            rec_key=st.rec_key.at[b, v].set(block),
-            rec_ts=st.rec_ts.at[b, v].set(fresh),
-            rec_cnt=st.rec_cnt.at[b, v].set(1),
-            rec_age=st.rec_age.at[b, v].set(ts),
-            rec_loc=st.rec_loc.at[b, v].set(0),
-        )
-        if cfg.min_support == 1:  # mining-ready on first sight (static branch)
-            st = _migrate(cfg, st, block, b, v, st.rec_ts[b, v])
-        return st
-
-    def case_rec(st: MithrilState) -> MithrilState:
-        cnt = st.rec_cnt[b, way]            # invariant: cnt < R here
-        rec_ts = st.rec_ts.at[b, way, cnt].set(ts)
-        st = st._replace(rec_ts=rec_ts, rec_cnt=st.rec_cnt.at[b, way].add(1))
-        return lax.cond(
-            st.rec_cnt[b, way] >= cfg.min_support,
-            lambda s: _migrate(cfg, s, block, b, way, s.rec_ts[b, way]),
-            lambda s: s, st)
-
-    def case_mine(st: MithrilState) -> MithrilState:
-        row = st.rec_row[b, way]
-        mcnt = st.mine_cnt[row]
-        can = mcnt < cfg.max_support
-        pos = jnp.minimum(mcnt, cfg.max_support - 1)
-        mine_ts = st.mine_ts.at[row, pos].set(
-            jnp.where(can, ts, st.mine_ts[row, pos]))
-        # exceeding S marks the block frequent (excluded from mining)
-        mine_cnt = st.mine_cnt.at[row].set(
-            jnp.where(can, mcnt + 1, cfg.max_support + 1))
-        return st._replace(mine_ts=mine_ts, mine_cnt=mine_cnt)
-
-    branch = jnp.where(found, jnp.where(in_mine, 2, 1), 0)
-    state = lax.switch(branch, [case_new, case_rec, case_mine], state)
-    return state._replace(ts=ts + 1)
-
-
-def record_event(cfg: MithrilConfig, state: MithrilState,
-                 block: jax.Array) -> MithrilState:
+def record_event(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
+                 enabled: jax.Array = True) -> MithrilState:
     """Record one request WITHOUT the mining trigger (rFlag path only).
 
-    Callers must follow up with :func:`maybe_mine` before the next
-    recording event — the mining table holds at most ``mine_rows`` rows and
-    ``_migrate`` relies on it not being full. The split exists for the
-    batched sweep engine: under ``vmap`` a per-lane ``lax.cond`` lowers to
-    a select that executes *both* branches every step, so the (rare,
-    expensive) mining pass must be hoisted out of the vmapped step and
-    guarded by a batch-level ``lax.cond`` instead.
+    Contract: callers MUST follow up with :func:`maybe_mine` before the
+    next recording event — the mining table holds at most ``mine_rows``
+    rows and the migration scatter relies on it not being full. The split
+    exists for the batched sweep engine, which hoists the (rare,
+    expensive) mining pass out of the vmapped step to a batch-level
+    barrier (DESIGN.md §6).
+
+    ``enabled=False`` makes the event a bit-exact no-op (every slot is
+    written back with its old value and ``ts`` does not advance), which
+    replaces the ``lax.cond`` wrappers the simulator segments used to
+    need — under ``vmap`` those conds copied every table per request.
+
+    The three per-event cases (new block / still recording /
+    mining-resident) are computed unconditionally as row values and
+    selected as scalars; each table gets exactly one scatter:
+
+      recording table  (bucket, way)    way = probe hit or victim
+      mining table     (row,)           row = migration target or rec_row
     """
-    return _record_event(cfg, state, block)
+    i32 = jnp.int32
+    r_sup, s_sup = cfg.min_support, cfg.max_support
+    enabled = jnp.asarray(enabled)
+    ts = state.ts
+
+    b, w, found = locate(state.rec_key, state.rec_age, block, cfg.rec_buckets)
+    in_mine = state.rec_loc[b, w] == 1
+    is_new = enabled & ~found                 # allocate a recording row
+    is_rec = enabled & found & ~in_mine       # append a timestamp in place
+    is_upd = enabled & found & in_mine        # timestamps go to the mining row
+
+    old_key, old_ts_row = state.rec_key[b, w], state.rec_ts[b, w]
+    old_cnt, old_age = state.rec_cnt[b, w], state.rec_age[b, w]
+    old_loc, old_row = state.rec_loc[b, w], state.rec_row[b, w]
+
+    # recording-table row values (invariant: old_cnt < R when is_rec)
+    kr = jnp.arange(r_sup)
+    ts_row = jnp.where(is_new, jnp.where(kr == 0, ts, 0),
+                       jnp.where(is_rec, jnp.where(kr == old_cnt, ts,
+                                                   old_ts_row), old_ts_row))
+    cnt_val = jnp.where(is_new, 1, old_cnt + is_rec.astype(i32))
+
+    # mining-ready: R timestamps accumulated (immediately, when R == 1)
+    migrate = is_rec & (cnt_val >= r_sup)
+    if r_sup == 1:  # static branch: new rows are born mining-ready
+        migrate = migrate | is_new
+    fill = state.mine_fill                    # invariant: fill < mine_rows
+
+    # mining-table row: migration target, the block's resident row, or a
+    # no-op write of row 0's old contents
+    m = jnp.where(migrate, fill, jnp.where(is_upd, old_row, 0))
+    old_mblk, old_mts, old_mcnt = (state.mine_block[m], state.mine_ts[m],
+                                   state.mine_cnt[m])
+    can = old_mcnt < s_sup
+    pos = jnp.minimum(old_mcnt, s_sup - 1)
+    ks = jnp.arange(s_sup)
+    mig_ts = jnp.where(ks < r_sup,
+                       jnp.zeros((s_sup,), i32).at[:r_sup].set(ts_row),
+                       old_mts)
+    upd_ts = jnp.where((ks == pos) & can, ts, old_mts)
+
+    return state._replace(
+        rec_key=state.rec_key.at[b, w].set(jnp.where(is_new, block, old_key)),
+        rec_ts=state.rec_ts.at[b, w].set(ts_row),
+        rec_cnt=state.rec_cnt.at[b, w].set(cnt_val),
+        rec_age=state.rec_age.at[b, w].set(jnp.where(is_new, ts, old_age)),
+        rec_loc=state.rec_loc.at[b, w].set(
+            jnp.where(migrate, 1, jnp.where(is_new, 0, old_loc))),
+        rec_row=state.rec_row.at[b, w].set(jnp.where(migrate, fill, old_row)),
+        mine_block=state.mine_block.at[m].set(
+            jnp.where(migrate, block, old_mblk)),
+        mine_ts=state.mine_ts.at[m].set(
+            jnp.where(migrate, mig_ts, jnp.where(is_upd, upd_ts, old_mts))),
+        # exceeding S marks the block frequent (excluded from mining)
+        mine_cnt=state.mine_cnt.at[m].set(
+            jnp.where(migrate, r_sup,
+                      jnp.where(is_upd,
+                                jnp.where(can, old_mcnt + 1, s_sup + 1),
+                                old_mcnt))),
+        mine_fill=fill + migrate.astype(i32),
+        ts=ts + enabled.astype(i32),
+    )
 
 
 def maybe_mine(cfg: MithrilConfig, state: MithrilState,
                pairwise_fn: Optional[Callable] = None) -> MithrilState:
-    """Run ``mine`` iff the mining table is full (the Alg. 3 trigger)."""
+    """Run ``mine`` iff the mining table is full (the Alg. 3 trigger).
+
+    This is the second half of the record/maybe_mine contract: it must
+    run between any :func:`record_event` and the next one, restoring the
+    ``mine_fill < mine_rows`` invariant the migration scatter assumes.
+    """
     return lax.cond(
         state.mine_fill >= cfg.mine_rows,
         functools.partial(mine, cfg, pairwise_fn=pairwise_fn),
@@ -205,20 +321,29 @@ def maybe_mine(cfg: MithrilConfig, state: MithrilState,
 
 
 def record(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
-           pairwise_fn: Optional[Callable] = None) -> MithrilState:
-    """Record one request (Alg. 3 rFlag path); mines when the table fills."""
-    state = _record_event(cfg, state, block)
+           pairwise_fn: Optional[Callable] = None,
+           enabled: jax.Array = True) -> MithrilState:
+    """Record one request (Alg. 3 rFlag path); mines when the table fills.
+
+    The serial convenience composition ``record_event`` + ``maybe_mine``
+    — use it whenever events are processed one lane at a time; batched
+    callers must keep the two halves apart (see :func:`record_event`).
+    """
+    state = record_event(cfg, state, block, enabled=enabled)
     return maybe_mine(cfg, state, pairwise_fn=pairwise_fn)
 
 
 def access(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
            do_record: jax.Array, do_lookup: jax.Array,
            pairwise_fn: Optional[Callable] = None):
-    """Alg. 3: optional record (rFlag) + optional prefetch lookup (pFlag)."""
-    state = lax.cond(
-        do_record,
-        functools.partial(record, cfg, block=block, pairwise_fn=pairwise_fn),
-        lambda s: s, state)
+    """Alg. 3: optional record (rFlag) + optional prefetch lookup (pFlag).
+
+    ``do_record`` gates the recording event branchlessly (no ``lax.cond``
+    — a disabled event is a bit-exact no-op) and the composed ``record``
+    keeps the record/maybe_mine contract internally.
+    """
+    state = record(cfg, state, block, pairwise_fn=pairwise_fn,
+                   enabled=do_record)
     cand = lookup(cfg, state, block)
     empty = jnp.full_like(cand, EMPTY)
     return state, jnp.where(do_lookup, cand, empty)

@@ -1,7 +1,8 @@
 """Pallas TPU kernels (validated in interpret mode on CPU) + oracles."""
 
 from . import ops, ref
-from .ops import mithril_pairwise, paged_decode, prefetch_lookup
+from .ops import (mithril_pairwise, mithril_pairwise_batched, paged_decode,
+                  prefetch_lookup)
 
-__all__ = ["ops", "ref", "mithril_pairwise", "paged_decode",
-           "prefetch_lookup"]
+__all__ = ["ops", "ref", "mithril_pairwise", "mithril_pairwise_batched",
+           "paged_decode", "prefetch_lookup"]

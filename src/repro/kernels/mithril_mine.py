@@ -29,6 +29,25 @@ from jax.experimental import pallas as pl
 from .backend import default_interpret
 
 
+def _offset_code(ts_i, cnt_i, val_i, live_i, ts_j, cnt_j, val_j,
+                 delta: int):
+    """Association codes for one shifted slab: (BLK, 1) int32 0/1/2.
+
+    Shared by the serial row-block kernel below and the lanes-axis
+    batched kernel (``mithril_mine_batched``) — same math, same
+    tie-breaking as ``core.mining.pairwise_codes``.
+    """
+    gap_ok = (ts_j[:, :1] - ts_i[:, :1]) <= delta
+    same_cnt = cnt_j == cnt_i
+    diffs = jnp.abs(ts_j - ts_i)
+    weak = jnp.all(jnp.where(live_i, diffs <= delta, True), axis=1,
+                   keepdims=True)
+    strong = weak & jnp.any(jnp.where(live_i, diffs == 1, False), axis=1,
+                            keepdims=True)
+    ok = (val_i == 1) & (val_j == 1) & gap_ok & same_cnt
+    return jnp.where(ok & strong, 2, jnp.where(ok & weak, 1, 0))
+
+
 def _mine_kernel(ts_ref, cnt_ref, valid_ref, out_ref, *, delta: int,
                  window: int, blk: int):
     """Grid: (n_row_blocks,). ts_ref: full (N_pad, S); out: (BLK, W) tile."""
@@ -42,18 +61,10 @@ def _mine_kernel(ts_ref, cnt_ref, valid_ref, out_ref, *, delta: int,
     live_i = k_iota < cnt_i                      # aligned-pair mask
 
     for b in range(window):
-        ts_j = ts_ref[pl.ds(r0 + 1 + b, blk), :]
-        cnt_j = cnt_ref[pl.ds(r0 + 1 + b, blk), :]
-        val_j = valid_ref[pl.ds(r0 + 1 + b, blk), :]
-        gap_ok = (ts_j[:, :1] - ts_i[:, :1]) <= delta
-        same_cnt = cnt_j == cnt_i
-        diffs = jnp.abs(ts_j - ts_i)
-        weak = jnp.all(jnp.where(live_i, diffs <= delta, True), axis=1,
-                       keepdims=True)
-        strong = weak & jnp.any(jnp.where(live_i, diffs == 1, False), axis=1,
-                                keepdims=True)
-        ok = (val_i == 1) & (val_j == 1) & gap_ok & same_cnt
-        code = jnp.where(ok & strong, 2, jnp.where(ok & weak, 1, 0))
+        code = _offset_code(ts_i, cnt_i, val_i, live_i,
+                            ts_ref[pl.ds(r0 + 1 + b, blk), :],
+                            cnt_ref[pl.ds(r0 + 1 + b, blk), :],
+                            valid_ref[pl.ds(r0 + 1 + b, blk), :], delta)
         out_ref[:, b] = code[:, 0].astype(jnp.int32)
 
 

@@ -16,7 +16,15 @@ import jax.numpy as jnp
 from .backend import default_interpret
 from .hash_lookup import hash_lookup_kernel
 from .mithril_mine import pairwise_codes_kernel
+from .mithril_mine_batched import pairwise_codes_batched_kernel
 from .paged_decode import paged_decode_kernel
+
+
+def _mine_padding(n: int, window: int, blk: int):
+    """Row padding so shifted slices stay in range and rows tile by blk."""
+    blk = min(blk, max(8, 1 << (n - 1).bit_length()))
+    n_rows = ((n + blk - 1) // blk) * blk
+    return blk, n_rows, n_rows + window + 1
 
 
 @functools.partial(jax.jit, static_argnames=("delta", "window", "blk"))
@@ -28,10 +36,7 @@ def mithril_pairwise(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
     count tiles by ``blk``; padded rows are invalid and can never match.
     """
     n, s = ts.shape
-    blk = min(blk, max(8, 1 << (n - 1).bit_length()))
-    n_tiles = (n + blk - 1) // blk
-    n_rows = n_tiles * blk
-    pad_total = n_rows + window + 1
+    blk, _, pad_total = _mine_padding(n, window, blk)
     big = jnp.int32(2_000_000_000)
     ts_p = jnp.full((pad_total, s), big, jnp.int32).at[:n].set(ts)
     cnt_p = jnp.zeros((pad_total, 1), jnp.int32).at[:n, 0].set(cnt)
@@ -40,6 +45,29 @@ def mithril_pairwise(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
     out = pairwise_codes_kernel(ts_p, cnt_p, val_p, delta, window, blk=blk,
                                 interpret=default_interpret())
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "window", "blk"))
+def mithril_pairwise_batched(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
+                             delta: int, window: int,
+                             blk: int = 128) -> jax.Array:
+    """Drop-in for core.mining.pairwise_codes_batched
+    ((L,N,S),(L,N),(L,N) -> (L,N,W)): the sweep engine's batched mining
+    barrier in one kernel launch (grid over (lane, row-block)).
+
+    Same per-lane padding contract as ``mithril_pairwise``; padded rows
+    are invalid and can never match.
+    """
+    lanes, n, s = ts.shape
+    blk, _, pad_total = _mine_padding(n, window, blk)
+    big = jnp.int32(2_000_000_000)
+    ts_p = jnp.full((lanes, pad_total, s), big, jnp.int32).at[:, :n].set(ts)
+    cnt_p = jnp.zeros((lanes, pad_total, 1), jnp.int32).at[:, :n, 0].set(cnt)
+    val_p = jnp.zeros((lanes, pad_total, 1), jnp.int32).at[:, :n, 0].set(
+        valid.astype(jnp.int32))
+    out = pairwise_codes_batched_kernel(ts_p, cnt_p, val_p, delta, window,
+                                        blk=blk, interpret=default_interpret())
+    return out[:, :n]
 
 
 @jax.jit

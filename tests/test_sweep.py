@@ -80,6 +80,44 @@ def test_pad_value_is_inert(traces):
                                       err_msg=f"stats.{field} read the pad")
 
 
+def test_sweep_bit_identical_edge_configs(traces):
+    """Equivalence through the scatter-form record path's edge branches:
+    min_support==1 (immediate migrate on first sight) and the
+    miss+evict recording policy (two mining barriers per step)."""
+    from repro.cache import SimConfig
+    from repro.core import MithrilConfig
+
+    edge = [
+        SimConfig(capacity=CAP, use_mithril=True,
+                  mithril=MithrilConfig(min_support=1, max_support=4,
+                                        lookahead=20, rec_buckets=256,
+                                        rec_ways=4, mine_rows=32,
+                                        pf_buckets=256, pf_ways=4)),
+        SimConfig(capacity=CAP, use_mithril=True,
+                  mithril=MithrilConfig(min_support=2, max_support=6,
+                                        lookahead=30, rec_buckets=256,
+                                        rec_ways=4, mine_rows=32,
+                                        pf_buckets=256, pf_ways=4,
+                                        record_on="miss+evict")),
+    ]
+    suite = pad_traces(traces)
+    for cfg in edge:
+        res = sweep(cfg, suite.blocks, suite.lengths, chunk=CHUNK)
+        for i, trace in enumerate(traces.values()):
+            ref = simulate(cfg, trace)
+            got = res.result(i)
+            for field, a, b in zip(ref.stats._fields, got.stats, ref.stats):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{cfg.mithril.record_on}/R="
+                            f"{cfg.mithril.min_support}: stats.{field} "
+                            f"diverged on trace {i}")
+            np.testing.assert_array_equal(
+                got.hit_curve, np.asarray(ref.hit_curve),
+                err_msg=f"R={cfg.mithril.min_support}: hit curve diverged "
+                        f"on trace {i}")
+
+
 def test_one_compile_per_config_shape(swept):
     _, results = swept
     for name, res in results.items():
