@@ -1,9 +1,16 @@
-"""Compare a fresh BENCH_sweep.json against the checked-in baseline.
+"""Compare a fresh BENCH_sweep.json against its per-geometry baseline.
 
     PYTHONPATH=src python -m benchmarks.compare [--fresh PATH] [--baseline PATH]
 
-Policy (ROADMAP open item 2 — make CI *compare* trajectories, not just
-archive them):
+Baselines are PER GEOMETRY (ISSUE 4 / ROADMAP): each benchmark suite —
+``quick``, ``mid``, ``full`` (``benchmarks.run --suite``) — gates
+against its own ``BENCH_baseline_<suite>.json``, resolved from the
+fresh run's ``meta.suite``, so quick CI runs, development mid runs and
+paper-scale corpus runs each keep an independent trajectory. A legacy
+un-suffixed ``BENCH_baseline.json`` is used as fallback when the
+per-geometry file does not exist yet.
+
+Policy (make CI *compare* trajectories, not just archive them):
 
 * hit-ratio drift on any (job, config) sweep present in both files is a
   FAILURE (exit 1): the simulator is integer arithmetic end to end, so
@@ -15,9 +22,9 @@ archive them):
   benchmarks seed their own trajectory on the next baseline refresh);
   sweeps missing from the fresh run FAIL (a benchmark silently died).
 
-Refresh the baseline by copying a trusted run:
+Refresh a geometry's baseline by copying a trusted run of that suite:
 
-    cp results/bench/BENCH_sweep.json results/bench/BENCH_baseline.json
+    cp results/bench/BENCH_sweep.json results/bench/BENCH_baseline_quick.json
 """
 
 from __future__ import annotations
@@ -46,8 +53,10 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     fresh_ix, base_ix = _index(fresh), _index(baseline)
 
     fresh_meta, base_meta = fresh.get("meta", {}), baseline.get("meta", {})
-    geometry = ("quick", "n_traces", "trace_len")
-    if any(fresh_meta.get(k) != base_meta.get(k) for k in geometry):
+    geometry = ("quick", "n_traces", "trace_len", "corpus_scale",
+                "corpus_len")
+    if any(k in fresh_meta and k in base_meta
+           and fresh_meta[k] != base_meta[k] for k in geometry):
         notes.append(
             f"geometry differs (fresh={[fresh_meta.get(k) for k in geometry]}"
             f" baseline={[base_meta.get(k) for k in geometry]}): "
@@ -93,22 +102,37 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     return failures, warnings, notes, len(base_ix)
 
 
+def baseline_path(fresh_meta: dict) -> str:
+    """Per-geometry baseline for the fresh run's suite label, falling
+    back to the legacy un-suffixed file when none exists yet."""
+    suite = fresh_meta.get("suite")
+    if suite:
+        per_geo = os.path.join(BENCH_DIR, f"BENCH_baseline_{suite}.json")
+        if os.path.exists(per_geo):
+            return per_geo
+    return os.path.join(BENCH_DIR, "BENCH_baseline.json")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh",
                     default=os.path.join(BENCH_DIR, "BENCH_sweep.json"))
-    ap.add_argument("--baseline",
-                    default=os.path.join(BENCH_DIR, "BENCH_baseline.json"))
+    ap.add_argument("--baseline", default=None,
+                    help="baseline json (default: BENCH_baseline_<suite>"
+                         ".json for the fresh run's suite)")
     ap.add_argument("--wallclock-warn", type=float, default=0.20,
                     help="warn when wall-clock regresses past this fraction")
     a = ap.parse_args(argv)
 
     with open(a.fresh) as f:
         fresh = json.load(f)
+    if a.baseline is None:
+        a.baseline = baseline_path(fresh.get("meta", {}))
     if not os.path.exists(a.baseline):
         print(f"no baseline at {a.baseline}; nothing to compare "
               "(check one in to start the trajectory)")
         return 0
+    print(f"baseline: {a.baseline}")
     with open(a.baseline) as f:
         baseline = json.load(f)
 

@@ -1,6 +1,13 @@
 """Benchmark harness entry point — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--suite quick|mid|full]
+
+Suites fix the whole geometry — synthetic-suite trace count/length AND
+corpus scale — so every ``BENCH_sweep.json`` is comparable against the
+matching per-geometry baseline (``BENCH_baseline_<suite>.json``,
+``benchmarks.compare``): ``quick`` is CI-sized, ``mid`` the development
+default, ``full`` runs the paper-scale 135-trace corpus. ``--quick``
+stays as an alias for ``--suite quick``.
 
 Prints ``name,seconds,derived`` CSV summary lines, writes detailed CSVs
 to results/bench/, and emits ``results/bench/BENCH_sweep.json`` — the
@@ -17,19 +24,34 @@ import argparse
 import time
 import traceback
 
+SUITES = {
+    # synthetic suite geometry + corpus registry scale
+    "quick": dict(n_traces=6, trace_len=20_000,
+                  corpus_scale="quick", corpus_len=4_000),
+    "mid": dict(n_traces=16, trace_len=40_000,
+                corpus_scale="mid", corpus_len=20_000),
+    "full": dict(n_traces=16, trace_len=40_000,
+                 corpus_scale="full", corpus_len=50_000),
+}
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=sorted(SUITES), default=None,
+                    help="benchmark geometry (default: mid)")
     ap.add_argument("--quick", action="store_true",
-                    help="smaller trace suite (CI-speed)")
+                    help="alias for --suite quick (CI-speed)")
     a = ap.parse_args(argv)
-    n_traces = 6 if a.quick else 16
-    tlen = 20_000 if a.quick else 40_000
+    if a.quick and a.suite not in (None, "quick"):
+        ap.error(f"--quick contradicts --suite {a.suite}")
+    suite = a.suite or ("quick" if a.quick else "mid")
+    geo = SUITES[suite]
+    n_traces, tlen = geo["n_traces"], geo["trace_len"]
 
-    from . import (common, expert_prefetch, fig5_representative,
-                   fig6_hrc_precision, fig7_params, fig8_latency,
-                   fig9_midfreq, fig34_trace_sweep, kernel_micro,
-                   table1_hit_ratio, tiered_serving)
+    from . import (common, corpus_sweep, expert_prefetch,
+                   fig5_representative, fig6_hrc_precision, fig7_params,
+                   fig8_latency, fig9_midfreq, fig34_trace_sweep,
+                   kernel_micro, table1_hit_ratio, tiered_serving)
 
     jobs = [
         ("table1_hit_ratio",
@@ -43,6 +65,9 @@ def main(argv=None) -> None:
         ("fig7_params", lambda: fig7_params.main(min(tlen, 30_000))),
         ("fig8_latency", lambda: fig8_latency.main(tlen)),
         ("fig9_midfreq", lambda: fig9_midfreq.main(tlen)),
+        ("corpus_sweep",
+         lambda: corpus_sweep.main(geo["corpus_scale"],
+                                   geo["corpus_len"])),
         ("tiered_serving", tiered_serving.main),
         ("expert_prefetch", expert_prefetch.main),
         ("kernel_micro", kernel_micro.main),
@@ -69,9 +94,13 @@ def main(argv=None) -> None:
 
     import jax
     common.write_bench_json(
-        meta={"quick": a.quick, "n_traces": n_traces, "trace_len": tlen,
+        meta={"suite": suite, "quick": suite == "quick",
+              "n_traces": n_traces, "trace_len": tlen,
+              "corpus_scale": geo["corpus_scale"],
+              "corpus_len": geo["corpus_len"],
               "jax": jax.__version__,
               "backend": jax.default_backend(),
+              "n_devices": jax.local_device_count(),
               "failures": failures},
         jobs=job_log)
     if failures:

@@ -7,8 +7,9 @@ from .amp import AmpConfig, AmpState, amp_access, init_amp
 from .pg import PgConfig, PgState, init_pg, pg_access
 from .simulator import (SimConfig, SimResult, Stats, build_segments,
                         build_step, max_hit_ratio, simulate)
-from .sweep import (PaddedSuite, SweepResult, build_batched_step,
-                    compile_count, pad_traces, sweep, sweep_grid)
+from .sweep import (LaneGroup, PaddedSuite, SweepPlan, SweepResult,
+                    build_batched_step, compile_count, pad_traces,
+                    plan_sweep, sweep, sweep_grid, sweep_scheduled)
 
 __all__ = [
     "CacheState", "Evicted", "access", "contains", "init_cache",
@@ -17,6 +18,7 @@ __all__ = [
     "PgConfig", "PgState", "init_pg", "pg_access",
     "SimConfig", "SimResult", "Stats", "build_segments", "build_step",
     "max_hit_ratio", "simulate",
-    "PaddedSuite", "SweepResult", "build_batched_step", "compile_count",
-    "pad_traces", "sweep", "sweep_grid",
+    "LaneGroup", "PaddedSuite", "SweepPlan", "SweepResult",
+    "build_batched_step", "compile_count", "pad_traces", "plan_sweep",
+    "sweep", "sweep_grid", "sweep_scheduled",
 ]

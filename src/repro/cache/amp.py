@@ -6,6 +6,16 @@ degree ``p`` and trigger distance ~p/2. Degree adapts up when prefetched
 blocks are consumed ("waited on" in the paper's timing model collapses to
 consumption in a trace-driven simulator) and down when prefetched blocks
 are evicted unused. Simplifications are recorded in DESIGN.md §8.
+
+Like the MITHRIL record path and PG, the per-request step is in
+branchless scatter form (DESIGN.md §7/§8): the continuing-stream and
+fresh-stream cases are computed unconditionally as per-slot values,
+selected as scalars, and applied with one ``.at[s].set(...)`` per state
+vector — no ``lax.cond``, so the vmapped sweep never copies the stream
+table per request. ``enabled=False`` makes an access a bit-exact no-op,
+which removes the last carry-subtree select from ``simulator.py``'s
+``seg_prefetch``. ``tests/test_amp_scatter.py`` pins bit-equivalence to
+the frozen cond-form implementation this replaced.
 """
 
 from __future__ import annotations
@@ -15,7 +25,6 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.hashindex import EMPTY
 
@@ -47,43 +56,53 @@ def init_amp(cfg: AmpConfig) -> AmpState:
         age=jnp.zeros((ns,), i32), clock=jnp.zeros((), i32))
 
 
-def amp_access(cfg: AmpConfig, st: AmpState,
-               block: jax.Array) -> Tuple[AmpState, jax.Array]:
-    """Advance AMP on a demand access; returns (state, (max_degree,) blocks)."""
-    st = st._replace(clock=st.clock + 1)
+def amp_access(cfg: AmpConfig, st: AmpState, block: jax.Array,
+               enabled: jax.Array = True) -> Tuple[AmpState, jax.Array]:
+    """Advance AMP on a demand access; returns (state, (max_degree,) blocks).
+
+    Branchless scatter form: ``s`` is the continuing stream on a
+    sequential match, else the LRU victim slot, and the two cases'
+    values are selected as scalars before one ``.at[s].set`` per vector.
+    With ``enabled=False`` every slot is written back with its old value
+    and the clock does not advance (bit-exact no-op; the returned vector
+    is all-EMPTY and must be discarded by the caller).
+    """
+    enabled = jnp.asarray(enabled)
+    clock = st.clock + enabled.astype(jnp.int32)
     match = st.last == block - 1
     found = jnp.any(match)
-    s = jnp.argmax(match).astype(jnp.int32)
+    s = jnp.where(found, jnp.argmax(match).astype(jnp.int32),
+                  jnp.argmin(st.age).astype(jnp.int32))
 
-    def cont(st: AmpState):
-        run = st.seqlen[s] + 1
-        deg = st.deg[s]
-        near_frontier = block + jnp.maximum(deg // 2, 1) >= st.frontier[s]
-        want = (run >= cfg.min_run) & near_frontier
-        start = jnp.maximum(st.frontier[s], block) + 1
-        end = block + deg
-        offs = jnp.arange(cfg.max_degree, dtype=jnp.int32)
-        vec = jnp.where(want & (start + offs <= end), start + offs, EMPTY)
-        st = st._replace(
-            last=st.last.at[s].set(block),
-            seqlen=st.seqlen.at[s].set(run),
-            frontier=st.frontier.at[s].set(
-                jnp.where(want, jnp.maximum(st.frontier[s], end),
-                          st.frontier[s])),
-            age=st.age.at[s].set(st.clock))
-        return st, vec
+    # continuing-stream values (meaningful only when found)
+    run = st.seqlen[s] + 1
+    deg = st.deg[s]
+    near_frontier = block + jnp.maximum(deg // 2, 1) >= st.frontier[s]
+    want = found & (run >= cfg.min_run) & near_frontier
+    start = jnp.maximum(st.frontier[s], block) + 1
+    end = block + deg
+    offs = jnp.arange(cfg.max_degree, dtype=jnp.int32)
+    vec = jnp.where(enabled & want & (start + offs <= end), start + offs,
+                    EMPTY)
 
-    def fresh(st: AmpState):
-        v = jnp.argmin(st.age).astype(jnp.int32)
-        st = st._replace(
-            last=st.last.at[v].set(block),
-            seqlen=st.seqlen.at[v].set(1),
-            frontier=st.frontier.at[v].set(block),
-            deg=st.deg.at[v].set(cfg.init_degree),
-            age=st.age.at[v].set(st.clock))
-        return st, jnp.full((cfg.max_degree,), EMPTY, jnp.int32)
+    def sel(new, old):
+        return jnp.where(enabled, new, old)
 
-    return lax.cond(found, cont, fresh, st)
+    st = AmpState(
+        last=st.last.at[s].set(sel(block, st.last[s])),
+        seqlen=st.seqlen.at[s].set(sel(jnp.where(found, run, 1),
+                                       st.seqlen[s])),
+        frontier=st.frontier.at[s].set(sel(
+            jnp.where(found,
+                      jnp.where(want, jnp.maximum(st.frontier[s], end),
+                                st.frontier[s]),
+                      block),
+            st.frontier[s])),
+        deg=st.deg.at[s].set(sel(jnp.where(found, deg, cfg.init_degree),
+                                 st.deg[s])),
+        age=st.age.at[s].set(sel(clock, st.age[s])),
+        clock=clock)
+    return st, vec
 
 
 def _owning_stream(st: AmpState, block: jax.Array):

@@ -12,7 +12,6 @@ step per configuration; statistics match the paper's metrics:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple
 
 import jax
@@ -183,11 +182,14 @@ def build_segments(cfg: SimConfig):
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
                                                 PF_MITHRIL, valid)
 
-        # AMP sequential prefetching + degree feedback
+        # AMP sequential prefetching + degree feedback. Every piece is
+        # source-gated: the feedbacks key off valid-gated signals
+        # (used_src / eviction records are inert on invalid requests) and
+        # amp_access takes `valid` directly, so no subtree select remains
         if cfg.use_amp:
-            amp0 = carry["amp"]
-            amp = amp_feedback_used(cfg.amp, amp0, block, used_src == PF_AMP)
-            amp, vec = amp_access(cfg.amp, amp, block)
+            amp = amp_feedback_used(cfg.amp, carry["amp"], block,
+                                    used_src == PF_AMP)
+            amp, vec = amp_access(cfg.amp, amp, block, enabled=valid)
             cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec,
                                                   PF_AMP, valid)
             evb, evu, evsrc = evs
@@ -196,10 +198,7 @@ def build_segments(cfg: SimConfig):
                                            evu[i] & (evsrc[i] == PF_AMP))
             amp = amp_feedback_evicted(cfg.amp, amp, ev.block,
                                        ev.unused_pf & (ev.pf_src == PF_AMP))
-            # AMP has no enabled gate; its state is a handful of (NS,)
-            # vectors, so an invalid request selects the old subtree
-            out["amp"] = jax.tree_util.tree_map(
-                functools.partial(jnp.where, valid), amp, amp0)
+            out["amp"] = amp
 
         # probability graph
         if cfg.use_pg:

@@ -1,4 +1,4 @@
-"""Batched trace-sweep engine: one compiled step per *config shape*.
+"""Batched trace-sweep scheduler: corpus in, a handful of compiles out.
 
 The serial ``simulate`` compiles one ``lax.scan`` per (trace, config)
 pair, so sweeping a benchmark suite is compile-bound long before it is
@@ -10,9 +10,18 @@ compute-bound. This module instead
   same position of every trace advance together),
 * scans over fixed-size time *chunks* so peak memory is bounded by
   ``chunk * n_traces`` and arbitrarily long traces stream through the
-  same compiled executable, and
+  same compiled executable,
 * gates padded tails per trace so statistics are bit-identical to the
-  per-trace ``simulate`` (``tests/test_sweep.py`` asserts this).
+  per-trace ``simulate`` (``tests/test_sweep.py`` asserts this),
+* **schedules** corpus-scale suites (``plan_sweep``/``sweep_scheduled``,
+  DESIGN.md §8): traces are bucketed by length into fixed-width *lane
+  groups* — every group runs through the same ``(chunk, lane_width)``
+  executable, so a 135-trace corpus costs ONE compile per config — and
+* **shards** the lane axis across local devices
+  (``dist.sharding.lane_specs`` + ``shard_map``): lanes are independent,
+  so each device simulates its slice of the batch and per-lane results
+  are bit-identical to the single-device path
+  (``tests/test_scheduler.py`` pins this on a forced multi-device CPU).
 
 Batching invariants (DESIGN.md §6–§7):
 
@@ -36,7 +45,7 @@ Batching invariants (DESIGN.md §6–§7):
 from __future__ import annotations
 
 import functools
-from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Union
+from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +56,8 @@ from repro.core import mithril
 from .simulator import SimConfig, SimResult, Stats, build_segments
 
 DEFAULT_CHUNK = 4096
+DEFAULT_LANE_WIDTH = 16     # lanes per scheduled group (rounded to devices)
+LANE_AXIS = "lanes"         # mesh axis the scheduler shards lanes over
 
 
 class PaddedSuite(NamedTuple):
@@ -143,25 +154,91 @@ def build_batched_step(cfg: SimConfig):
     return init_batched, step
 
 
+def _lane_shards(n_lanes: int, shard: Optional[bool]) -> int:
+    """Devices to shard the lane axis over (1 = single-device path).
+
+    Auto policy (``shard=None``/``True``): shard over every local device
+    when the lane count divides — the same divisibility contract as
+    ``dist.sharding`` (non-dividing widths silently run single-device
+    rather than erroring). ``shard=False`` forces the single-device path
+    (the bit-exactness reference).
+    """
+    if shard is False:
+        return 1
+    n_dev = jax.local_device_count()
+    if n_dev > 1 and n_lanes % n_dev == 0:
+        return n_dev
+    return 1
+
+
 @functools.lru_cache(maxsize=None)
-def _runner(cfg: SimConfig, unroll: int):
-    """One (init, jitted chunk-scan) pair per config; jit caches per shape."""
+def _runner(cfg: SimConfig, unroll: int, n_shards: int = 1):
+    """One (init, jitted chunk-scan, place) triple per (config, shards).
+
+    With ``n_shards > 1`` the chunk scan runs under ``shard_map`` on a
+    1-D ``lanes`` mesh over the local devices: the carry (every leaf has
+    a leading lane dim — ``dist.sharding.lane_specs``) and the
+    ``(chunk, B)`` request slabs split over the lane axis, and each
+    device scans its own lanes. Lanes never communicate — the mining
+    barrier's ``lax.cond`` becomes a per-device conditional over the
+    device's own lanes — so per-lane results are bit-identical to the
+    single-device runner.
+    """
     init_batched, step = build_batched_step(cfg)
+
+    def scan_chunk(carry, blocks, valid):
+        return lax.scan(step, carry, (blocks, valid), unroll=unroll)
+
+    if n_shards <= 1:
+        return init_batched, jax.jit(scan_chunk), lambda carry: carry
+
+    # lazy: pulling repro.dist at module import would drag the model
+    # stack into every cache-layer import
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding as dist_sharding
+
+    mesh = jax.make_mesh((n_shards,), (LANE_AXIS,))
+    slab = P(None, LANE_AXIS)
+
+    def place(carry):
+        """Pre-shard the initial carry so the first chunk's input
+        shardings match every later chunk's (one executable, not an
+        unsharded-first-call variant + a sharded steady state). Trailing
+        ``None`` entries are trimmed because the executable cache keys on
+        the exact spec tuple and jit-output shardings come back trimmed —
+        a full-rank first call would compile a second, equivalent
+        executable."""
+        def trim(sp):
+            entries = tuple(sp)
+            while entries and entries[-1] is None:
+                entries = entries[:-1]
+            return P(*entries)
+
+        specs = jax.tree.map(trim,
+                             dist_sharding.lane_specs(carry, mesh,
+                                                      axis=LANE_AXIS),
+                             is_leaf=lambda x: isinstance(x, P))
+        return jax.device_put(carry, dist_sharding.to_named(specs, mesh))
 
     @jax.jit
     def run_chunk(carry, blocks, valid):
-        return lax.scan(step, carry, (blocks, valid), unroll=unroll)
+        cspec = dist_sharding.lane_specs(carry, mesh, axis=LANE_AXIS)
+        return shard_map(scan_chunk, mesh=mesh,
+                         in_specs=(cspec, slab, slab),
+                         out_specs=(cspec, slab),
+                         check_rep=False)(carry, blocks, valid)
 
-    return init_batched, run_chunk
+    return init_batched, run_chunk, place
 
 
-def compile_count(cfg: SimConfig, unroll: int = 1) -> int:
+def compile_count(cfg: SimConfig, unroll: int = 1, n_shards: int = 1) -> int:
     """Compiled-executable count for ``cfg``'s chunk runner (-1 if unknown).
 
     All chunks are padded to one (chunk, B) shape, so a full sweep — and
     every later sweep with the same batch geometry — reports 1.
     """
-    fn = _runner(cfg, unroll)[1]
+    fn = _runner(cfg, unroll, n_shards)[1]
     try:
         return int(fn._cache_size())
     except AttributeError:      # jit internals moved; treat as unknown
@@ -202,7 +279,8 @@ class SweepResult(NamedTuple):
 
 def sweep(cfg: SimConfig, blocks: np.ndarray,
           lengths: Optional[np.ndarray] = None,
-          chunk: int = DEFAULT_CHUNK, unroll: int = 1) -> SweepResult:
+          chunk: int = DEFAULT_CHUNK, unroll: int = 1,
+          shard: Optional[bool] = None) -> SweepResult:
     """Run a (B, T) padded trace batch through one configuration.
 
     ``lengths`` gives each trace's valid prefix (default: full T).
@@ -214,6 +292,11 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
     (``core.mithril``) is honored internally via the batch-level mining
     barriers of ``build_batched_step`` — callers never interleave their
     own recording with a sweep's.
+
+    ``shard`` selects the device layout: ``None``/``True`` shard the
+    lane axis over all local devices whenever the batch width divides
+    (per-lane results stay bit-identical — lanes are independent);
+    ``False`` forces the single-device runner.
     """
     import time
 
@@ -234,9 +317,10 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
     if padded_t != n_req:
         blocks = np.pad(blocks, ((0, 0), (0, padded_t - n_req)))
 
-    init_batched, run_chunk = _runner(cfg, unroll)
-    before = compile_count(cfg, unroll)
-    carry = init_batched(n_traces)
+    n_shards = _lane_shards(n_traces, shard)
+    init_batched, run_chunk, place = _runner(cfg, unroll, n_shards)
+    before = compile_count(cfg, unroll, n_shards)
+    carry = place(init_batched(n_traces))
     hit_chunks = []
     for k in range(n_chunks):
         sl = slice(k * chunk, (k + 1) * chunk)
@@ -247,9 +331,149 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
 
     stats = jax.device_get(carry["stats"])
     hit_curve = np.concatenate(hit_chunks, axis=1)[:, :n_req]
-    after = compile_count(cfg, unroll)
+    after = compile_count(cfg, unroll, n_shards)
     return SweepResult(stats=stats, hit_curve=hit_curve, lengths=lengths,
                        compiles=(after - before if before >= 0 else -1),
+                       seconds=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Corpus-scale scheduler: length-bucketed lane groups, one compiled shape
+# ---------------------------------------------------------------------------
+
+class LaneGroup(NamedTuple):
+    indices: Tuple[int, ...]    # original trace positions in this group
+    padded_t: int               # group time axis (a chunk multiple)
+
+
+class SweepPlan(NamedTuple):
+    """Device-and-shape schedule for a heterogeneous trace corpus.
+
+    Every group is padded to the SAME lane width and a chunk-multiple
+    time axis, so each group streams through the one compiled
+    ``(chunk, lane_width)`` executable; traces are bucketed by length
+    (longest first) so short traces never pay a long group's padded
+    tail. ``lane_width`` is rounded up to a multiple of ``n_shards`` so
+    the lane axis always divides the device mesh.
+    """
+
+    groups: Tuple[LaneGroup, ...]
+    lane_width: int
+    chunk: int
+    n_shards: int
+
+    @property
+    def padded_lane_steps(self) -> int:
+        """Total (lane x request) slots the schedule executes."""
+        return sum(g.padded_t for g in self.groups) * self.lane_width
+
+
+def plan_sweep(lengths, lane_width: Optional[int] = None,
+               chunk: int = DEFAULT_CHUNK,
+               n_shards: Optional[int] = None) -> SweepPlan:
+    """Bucket traces by length into fixed-geometry lane groups.
+
+    ``n_shards=None`` reads the local device count; pass 1 to plan a
+    single-device schedule. The effective chunk is capped at the longest
+    trace (padded up), so every group's scan runs the same
+    ``(chunk, lane_width)`` slab shape.
+    """
+    lengths = np.asarray(lengths, np.int64)
+    n = len(lengths)
+    if n == 0:
+        raise ValueError("plan_sweep needs at least one trace")
+    if n_shards is None:
+        n_shards = max(1, jax.local_device_count())
+    lane_width = min(n, DEFAULT_LANE_WIDTH) if lane_width is None \
+        else max(1, lane_width)
+    lane_width = -(-lane_width // n_shards) * n_shards
+    eff_chunk = max(1, min(chunk, int(lengths.max())))
+    order = np.argsort(-lengths, kind="stable")   # longest first
+    groups = []
+    for k in range(0, n, lane_width):
+        idx = order[k: k + lane_width]
+        tmax = max(1, int(lengths[idx].max()))
+        padded_t = -(-tmax // eff_chunk) * eff_chunk
+        groups.append(LaneGroup(tuple(int(i) for i in idx), padded_t))
+    return SweepPlan(tuple(groups), lane_width, eff_chunk, n_shards)
+
+
+def sweep_scheduled(cfg: SimConfig,
+                    traces: Union[Mapping[str, np.ndarray],
+                                  Sequence[np.ndarray], PaddedSuite,
+                                  np.ndarray],
+                    lengths: Optional[np.ndarray] = None,
+                    lane_width: Optional[int] = None,
+                    chunk: int = DEFAULT_CHUNK, unroll: int = 1,
+                    shard: Optional[bool] = None,
+                    plan: Optional[SweepPlan] = None) -> SweepResult:
+    """Sweep an arbitrary-size trace corpus through one configuration.
+
+    Accepts a dict/sequence of unequal-length traces, a
+    :class:`PaddedSuite`, or a ``(B, T)`` block array with ``lengths``.
+    The corpus is scheduled with :func:`plan_sweep` (length-bucketed
+    fixed-width lane groups), each group runs through :func:`sweep` —
+    sharded over local devices when possible — and per-trace results are
+    reassembled in the ORIGINAL trace order. Statistics are bit-identical
+    to sweeping (or serially simulating) each trace alone; the whole
+    corpus costs one compile per config shape because every group shares
+    the ``(chunk, lane_width)`` slab geometry. Groups shorter than the
+    lane width are padded with empty (length-0) lanes, which are
+    bit-exact no-ops under the §6 masking contract.
+    """
+    import time
+
+    t0 = time.time()
+    if not isinstance(traces, np.ndarray):
+        # suite-like inputs carry their own lengths; a conflicting
+        # explicit lengths argument would be silently wrong either way
+        if lengths is not None:
+            raise ValueError("pass lengths only with a (B, T) block array"
+                             " — suites already carry per-trace lengths")
+        if not isinstance(traces, PaddedSuite):
+            traces = pad_traces(traces)
+        blocks, lengths = traces.blocks, traces.lengths
+    else:
+        blocks = np.asarray(traces, np.int32)
+    if blocks.ndim != 2:
+        raise ValueError(f"traces must stack to (B, T), got {blocks.shape}")
+    n, t_max = blocks.shape
+    lengths = (np.full((n,), t_max, np.int64) if lengths is None
+               else np.asarray(lengths, np.int64))
+    if lengths.shape != (n,) or (lengths > t_max).any():
+        raise ValueError("lengths must be (B,) and <= trace axis")
+
+    if plan is None:
+        plan = plan_sweep(lengths, lane_width, chunk,
+                          n_shards=1 if shard is False else None)
+
+    stats_out = None
+    hit = np.zeros((n, t_max), bool)
+    compiles, unknown = 0, False
+    for g in plan.groups:
+        gb = np.zeros((plan.lane_width, g.padded_t), np.int32)
+        gl = np.zeros((plan.lane_width,), np.int64)
+        for j, idx in enumerate(g.indices):
+            ln = int(lengths[idx])
+            gb[j, :ln] = blocks[idx, :ln]
+            gl[j] = ln
+        res = sweep(cfg, gb, gl, chunk=plan.chunk, unroll=unroll,
+                    shard=shard)
+        unknown |= res.compiles < 0
+        compiles += max(res.compiles, 0)
+        if stats_out is None:
+            stats_out = [np.zeros((n,) + np.asarray(leaf).shape[1:],
+                                  np.asarray(leaf).dtype)
+                         for leaf in res.stats]
+        for j, idx in enumerate(g.indices):
+            ln = int(lengths[idx])
+            hit[idx, :ln] = res.hit_curve[j, :ln]
+            for leaf_out, leaf in zip(stats_out, res.stats):
+                leaf_out[idx] = np.asarray(leaf)[j]
+
+    return SweepResult(stats=Stats(*stats_out), hit_curve=hit,
+                       lengths=lengths,
+                       compiles=-1 if unknown else compiles,
                        seconds=time.time() - t0)
 
 

@@ -147,6 +147,24 @@ def batch_specs(batch, mesh):
     return jax.tree.map(leaf, batch)
 
 
+def lane_specs(tree, mesh, axis: str = "lanes"):
+    """Stacked-lane pytrees (the sweep engine's vmapped carries): every
+    leaf's leading dim is the lane axis and shards over ``axis`` under
+    the usual divisibility contract (non-dividing lane counts replicate,
+    so 1-device meshes and odd batch widths fall out instead of
+    erroring). Specs are full rank, like every rule in this module."""
+    size = axis_sizes(mesh).get(axis, 1)
+
+    def leaf(x) -> P:
+        shape = tuple(x.shape)
+        spec: list = [None] * len(shape)
+        if shape and size > 1 and shape[0] % size == 0:
+            spec[0] = axis
+        return P(*spec)
+
+    return jax.tree.map(leaf, tree)
+
+
 def cache_specs(cache, mesh):
     """Decode KV caches: leaves are (layer_stack, batch, ...); batch
     shards over the data axes and K/V head dims over "model" (TP serving

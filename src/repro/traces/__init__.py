@@ -1,11 +1,17 @@
-"""Synthetic trace generators + io (DESIGN.md §8 deviation 1)."""
+"""Synthetic trace generators, corpus registry + io (DESIGN.md §8)."""
 
-from .synthetic import (association_groups, interleaved_sequential, mixed,
-                        padded_suite, representative_traces, suite, zipf)
-from .io import load_traces, save_traces, workload_stats
+from .synthetic import (association_groups, interleaved_sequential, looping,
+                        mixed, padded_suite, representative_traces,
+                        stack_padded, suite, zipf)
+from .corpus import (SCALES, WorkloadSpec, build_corpus, corpus_specs,
+                     corpus_suite)
+from .io import (ingest, ingest_msr_csv, ingest_raw, ingest_to_npz,
+                 load_traces, save_traces, workload_stats)
 
 __all__ = [
-    "association_groups", "interleaved_sequential", "mixed",
-    "padded_suite", "representative_traces", "suite", "zipf",
+    "association_groups", "interleaved_sequential", "looping", "mixed",
+    "padded_suite", "representative_traces", "stack_padded", "suite", "zipf",
+    "SCALES", "WorkloadSpec", "build_corpus", "corpus_specs", "corpus_suite",
+    "ingest", "ingest_msr_csv", "ingest_raw", "ingest_to_npz",
     "load_traces", "save_traces", "workload_stats",
 ]

@@ -10,6 +10,8 @@ exploits, with tunable mixture weights (DESIGN.md §8):
   mid-range frequency with interleaving gaps: the sporadic associations
   MITHRIL mines. Group members are *spatially scattered*, so no sequential
   prefetcher can find them.
+* ``looping`` — cyclic scans over fixed regions (LRU-pathological; the
+  corpus registry's ``loop`` family).
 * ``zipf`` — skewed popularity: a hot head (LRU's home turf) plus a long
   one-shot tail (cold misses nobody should chase).
 * ``mixed`` — weighted interleave of the three; presets ``cp_like`` /
@@ -86,6 +88,33 @@ def association_groups(n_requests: int, n_groups: int = 200,
     return (arr % (1 << 30)).astype(np.int32)
 
 
+def looping(n_requests: int, loop_len: int = 800, n_loops: int = 4,
+            jitter: float = 0.02, lba_space: int = 1 << 22,
+            seed: int = 0) -> np.ndarray:
+    """Cyclic scans: repeated sequential passes over fixed regions.
+
+    The classic LRU-pathological regime (a loop slightly larger than the
+    cache evicts every block just before its reuse) and one of the
+    paper's corpus workload shapes. ``n_loops`` concurrent loops
+    interleave; ``jitter`` occasionally skips blocks so runs are not
+    perfectly dense (same rationale as ``interleaved_sequential``).
+    """
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, lba_space, size=n_loops)
+    which = rng.integers(0, n_loops, size=n_requests)
+    # per-request rank within its own loop (stable counting sort)
+    counts = np.bincount(which, minlength=n_loops)
+    order = np.argsort(which, kind="stable")
+    starts = np.cumsum(counts) - counts
+    ranks = np.empty(n_requests, np.int64)
+    ranks[order] = np.arange(n_requests) - np.repeat(starts, counts)
+    pos = ranks % max(1, loop_len)
+    skip = np.where(rng.random(n_requests) < jitter,
+                    rng.integers(1, 4, size=n_requests), 0)
+    out = base[which].astype(np.int64) + pos + skip
+    return (out % (1 << 30)).astype(np.int32)
+
+
 def zipf(n_requests: int, catalog: int = 1 << 16, alpha: float = 1.1,
          seed: int = 0) -> np.ndarray:
     rng = np.random.default_rng(seed)
@@ -117,6 +146,23 @@ def mixed(n_requests: int, w_seq: float = 0.3, w_assoc: float = 0.4,
         out[i] = parts[which][cursors[which]]
         cursors[which] += 1
     return out
+
+
+def stack_padded(traces: Dict[str, np.ndarray]):
+    """Stack a name->trace dict into ``(names, blocks, lengths)``.
+
+    The canonical zero-padded batch convention (DESIGN.md §6): ``blocks``
+    is ``(B, max_len)`` int32 with zeros past each trace's ``lengths[i]``.
+    Single implementation shared by ``padded_suite`` and
+    ``corpus.corpus_suite`` (and mirrored by ``cache.sweep.pad_traces``,
+    which additionally accepts anonymous sequences).
+    """
+    names = tuple(traces)
+    lengths = np.array([len(traces[k]) for k in names], np.int64)
+    blocks = np.zeros((len(names), int(lengths.max())), np.int32)
+    for i, k in enumerate(names):
+        blocks[i, : lengths[i]] = traces[k]
+    return names, blocks, lengths
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,14 +205,14 @@ def padded_suite(n_requests: int = 60_000, n_traces: int = 30,
         raise ValueError("min_frac must be in (0, 1]")
     traces = suite(n_requests, n_traces)
     rng = np.random.default_rng(seed)
-    names = tuple(traces.keys())
     lengths = np.full((n_traces,), n_requests, np.int64)
     if min_frac < 1.0:
         lengths = rng.integers(max(1, int(min_frac * n_requests)),
                                n_requests + 1, size=n_traces)
-    blocks = np.zeros((n_traces, n_requests), np.int32)
-    for i, name in enumerate(names):
-        blocks[i, : lengths[i]] = traces[name][: lengths[i]]
+    names, blocks, _ = stack_padded(
+        {k: traces[k][: lengths[i]] for i, k in enumerate(traces)})
+    if blocks.shape[1] != n_requests:       # every trace was shortened
+        blocks = np.pad(blocks, ((0, 0), (0, n_requests - blocks.shape[1])))
     return names, blocks, lengths
 
 

@@ -6,7 +6,8 @@ pip-installed there, so tests/conftest.py installs this shim into
 installed — e.g. in GitHub CI — it is used untouched).
 
 Covered surface: ``@settings(max_examples=, deadline=)`` stacked on
-``@given(*strategies)``, plus ``st.integers(lo, hi)`` and
+``@given(*strategies)``, plus ``st.integers(lo, hi)``,
+``st.booleans()``, ``st.tuples(*elems)`` and
 ``st.lists(elem, min_size=, max_size=)``. Examples are drawn from a
 per-test deterministic PRNG (seeded from the test's qualified name) so
 runs are reproducible; there is no shrinking — the failing example is in
@@ -31,6 +32,15 @@ class _Strategy:
 
 def integers(min_value: int, max_value: int) -> _Strategy:
     return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rnd: tuple(e.example_from(rnd)
+                                       for e in elements))
 
 
 def lists(elements: _Strategy, *, min_size: int = 0,
@@ -78,6 +88,8 @@ def install():
     """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
+    st_mod.booleans = booleans
+    st_mod.tuples = tuples
     st_mod.lists = lists
     hyp = types.ModuleType("hypothesis")
     hyp.given = given

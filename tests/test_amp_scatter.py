@@ -1,0 +1,159 @@
+"""Scatter-form AMP vs the frozen cond reference.
+
+The tentpole contract (ISSUE 4 / DESIGN.md §8): the branchless
+scatter-form ``amp.amp_access`` is bit-identical, per event, to the
+``lax.cond`` implementation it replaced — the last per-request cond
+under the sweep vmap. The replaced code is kept VERBATIM below as the
+oracle (the same pattern as ``tests/test_record_scatter.py``); property
+tests drive both over random and sequential-run-heavy block streams —
+the runs exercise the continuing-stream / prefetch-issue path, the
+random blocks the fresh-stream victim path — and compare every state
+leaf after every event. ``enabled=False`` must be a bit-exact no-op
+(that is what let ``simulator.seg_prefetch`` drop its AMP subtree
+select).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.cache.amp import (AmpConfig, AmpState, amp_access,
+                             amp_feedback_evicted, amp_feedback_used,
+                             init_amp)
+from repro.core.hashindex import EMPTY
+
+
+def assert_trees_equal(a, b, msg=""):
+    for (pa, xa), (pb, xb) in zip(jax.tree_util.tree_leaves_with_path(a),
+                                  jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{msg} leaf {jax.tree_util.keystr(pa)}")
+
+
+# ---------------------------------------------------------------------------
+# Frozen reference: pre-scatter amp_access (lax.cond form, PR 3)
+# ---------------------------------------------------------------------------
+
+def amp_access_reference(cfg: AmpConfig, st: AmpState, block: jax.Array):
+    st = st._replace(clock=st.clock + 1)
+    match = st.last == block - 1
+    found = jnp.any(match)
+    s = jnp.argmax(match).astype(jnp.int32)
+
+    def cont(st: AmpState):
+        run = st.seqlen[s] + 1
+        deg = st.deg[s]
+        near_frontier = block + jnp.maximum(deg // 2, 1) >= st.frontier[s]
+        want = (run >= cfg.min_run) & near_frontier
+        start = jnp.maximum(st.frontier[s], block) + 1
+        end = block + deg
+        offs = jnp.arange(cfg.max_degree, dtype=jnp.int32)
+        vec = jnp.where(want & (start + offs <= end), start + offs, EMPTY)
+        st = st._replace(
+            last=st.last.at[s].set(block),
+            seqlen=st.seqlen.at[s].set(run),
+            frontier=st.frontier.at[s].set(
+                jnp.where(want, jnp.maximum(st.frontier[s], end),
+                          st.frontier[s])),
+            age=st.age.at[s].set(st.clock))
+        return st, vec
+
+    def fresh(st: AmpState):
+        v = jnp.argmin(st.age).astype(jnp.int32)
+        st = st._replace(
+            last=st.last.at[v].set(block),
+            seqlen=st.seqlen.at[v].set(1),
+            frontier=st.frontier.at[v].set(block),
+            deg=st.deg.at[v].set(cfg.init_degree),
+            age=st.age.at[v].set(st.clock))
+        return st, jnp.full((cfg.max_degree,), EMPTY, jnp.int32)
+
+    return lax.cond(found, cont, fresh, st)
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+_CFGS = {
+    "default": AmpConfig(n_streams=4, init_degree=2, max_degree=4, min_run=2),
+    "eager": AmpConfig(n_streams=2, init_degree=3, max_degree=6, min_run=1),
+}
+_STEPS = {name: (jax.jit(functools.partial(amp_access, cfg)),
+                 jax.jit(functools.partial(amp_access_reference, cfg)))
+          for name, cfg in _CFGS.items()}
+
+# mostly-sequential streams over a tiny space: matches, victim reuse and
+# near-frontier retriggers all fire; the +1 steps build long runs
+SEQ_EVENTS = st.lists(
+    st.tuples(st.integers(0, 3), st.booleans()), min_size=1, max_size=80)
+
+
+def _drive(events):
+    """Interleave a few per-stream walkers: (stream, advance) events."""
+    pos = [10, 40, 70, 100]
+    blocks = []
+    for sid, advance in events:
+        if advance:
+            pos[sid] += 1
+        else:
+            pos[sid] += 7     # break the run: jumps re-allocate streams
+        blocks.append(pos[sid])
+    return blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEQ_EVENTS)
+def test_amp_access_matches_reference(events):
+    blocks = _drive(events)
+    for name, cfg in _CFGS.items():
+        step, step_ref = _STEPS[name]
+        got, want = init_amp(cfg), init_amp(cfg)
+        for i, blk in enumerate(blocks):
+            got, got_v = step(got, jnp.int32(blk))
+            want, want_v = step_ref(want, jnp.int32(blk))
+            assert_trees_equal(got, want, f"cfg={name} event {i} ({blk})")
+            np.testing.assert_array_equal(
+                np.asarray(got_v), np.asarray(want_v),
+                err_msg=f"cfg={name} prefetch vector on event {i} ({blk})")
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEQ_EVENTS)
+def test_amp_access_disabled_is_noop(events):
+    cfg = _CFGS["default"]
+    step = _STEPS["default"][0]
+    dis = jax.jit(functools.partial(amp_access, cfg, enabled=False))
+    stt = init_amp(cfg)
+    for blk in _drive(events):
+        stt, _ = step(stt, jnp.int32(blk))
+        frozen, vec = dis(stt, jnp.int32(blk))
+        assert_trees_equal(frozen, stt,
+                           f"enabled=False mutated AMP state on block {blk}")
+        assert (np.asarray(vec) == int(EMPTY)).all(), \
+            "enabled=False must return an all-EMPTY prefetch vector"
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEQ_EVENTS)
+def test_amp_feedback_with_inert_signals_is_noop(events):
+    """The simulator gates feedback by signals that are False/EMPTY on
+    invalid requests; with those inert inputs both feedbacks must be
+    bit-exact no-ops (what lets seg_prefetch skip the subtree select)."""
+    cfg = _CFGS["default"]
+    step = _STEPS["default"][0]
+    used = jax.jit(functools.partial(amp_feedback_used, cfg))
+    evicted = jax.jit(functools.partial(amp_feedback_evicted, cfg))
+    stt = init_amp(cfg)
+    off = jnp.array(False)
+    for blk in _drive(events):
+        stt, _ = step(stt, jnp.int32(blk))
+        assert_trees_equal(used(stt, jnp.int32(blk), off), stt,
+                           f"used=False mutated state on block {blk}")
+        assert_trees_equal(evicted(stt, jnp.int32(EMPTY), off), stt,
+                           f"evicted=False mutated state on block {blk}")

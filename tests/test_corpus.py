@@ -1,0 +1,114 @@
+"""Corpus registry: size, coverage, determinism (incl. cross-process).
+
+The registry must be paper-shaped (135 entries across five workload
+families), deterministic per spec NAME (seeds derive from crc32, never
+Python's randomized ``hash``), and stable across processes — the whole
+point of a registry is that any machine regenerates the same corpus.
+The ``slow``-marked full-corpus lane is opt-in locally via
+``REPRO_FULL_CORPUS=1`` (CI runs it in its own job).
+"""
+
+import os
+import subprocess
+import sys
+import zlib
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.traces import (SCALES, build_corpus, corpus_specs, corpus_suite,
+                          workload_stats)
+from repro.traces.corpus import FAMILIES
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+class TestRegistry:
+    def test_full_scale_is_paper_sized(self):
+        specs = corpus_specs(10_000, "full")
+        assert len(specs) == 135
+        fams = Counter(s.family for s in specs)
+        assert set(fams) == set(FAMILIES)
+        # every family contributes a real population, not a token entry
+        assert min(fams.values()) >= 20
+
+    def test_scales_nest_and_cover_families(self):
+        prev: set = set()
+        for scale in ("quick", "mid", "full"):
+            specs = corpus_specs(10_000, scale)
+            names = {s.name for s in specs}
+            assert len(specs) == SCALES[scale]
+            assert len(names) == len(specs)          # no duplicates
+            assert prev <= names, \
+                f"{scale} is missing smaller-scale specs: {prev - names}"
+            fams = {s.family for s in specs}
+            assert fams == set(FAMILIES), f"{scale} dropped a family"
+            prev = names
+
+    def test_unknown_scale_raises(self):
+        with pytest.raises(ValueError, match="scale"):
+            corpus_specs(1000, "huge")
+
+    def test_lengths_are_heterogeneous(self):
+        specs = corpus_specs(10_000, "mid")
+        lengths = {s.n_requests for s in specs}
+        assert len(lengths) >= 3          # real bucketing work for the plan
+        assert max(lengths) == 10_000
+
+    def test_seed_derivation_is_name_stable(self):
+        spec = corpus_specs(1000, "quick")[0]
+        assert spec.seed == (zlib.crc32(spec.name.encode()) & 0x7FFFFFFF)
+
+
+class TestDeterminism:
+    def test_rebuild_is_bit_identical(self):
+        a = build_corpus(corpus_specs(1500, "quick"))
+        b = build_corpus(corpus_specs(1500, "quick"))
+        assert list(a) == list(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+    def test_cross_process_bit_identical(self):
+        """A fresh interpreter regenerates the same corpus (no reliance
+        on interpreter state or randomized hashing)."""
+        script = ("import zlib\n"
+                  "from repro.traces import build_corpus, corpus_specs\n"
+                  "tr = build_corpus(corpus_specs(1500, 'quick'))\n"
+                  "for k, v in tr.items():\n"
+                  "    print(k, zlib.crc32(v.tobytes()))\n")
+        env = dict(os.environ, PYTHONPATH=SRC + os.pathsep +
+                   os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stderr
+        got = dict(ln.split() for ln in out.stdout.splitlines())
+        here = {k: str(zlib.crc32(v.tobytes()))
+                for k, v in build_corpus(corpus_specs(1500, "quick")).items()}
+        assert got == here
+
+    def test_suite_matches_registry_traces(self):
+        names, blocks, lengths = corpus_suite("quick", 1500)
+        traces = build_corpus(corpus_specs(1500, "quick"))
+        assert list(names) == list(traces)
+        for i, k in enumerate(names):
+            assert lengths[i] == len(traces[k])
+            np.testing.assert_array_equal(blocks[i, : lengths[i]], traces[k])
+            assert not blocks[i, lengths[i]:].any()   # zero-padded tail
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not os.environ.get("REPRO_FULL_CORPUS"),
+                    reason="full-corpus lane is opt-in: REPRO_FULL_CORPUS=1")
+def test_full_corpus_builds_and_is_sane():
+    """The full 135-trace corpus generates end to end, every trace is
+    non-degenerate and its workload statistics are finite."""
+    traces = build_corpus(corpus_specs(10_000, "full"))
+    assert len(traces) == 135
+    for name, tr in traces.items():
+        assert tr.dtype == np.int32 and len(tr) >= 1, name
+        assert tr.min() >= 0, name
+        stats = workload_stats(tr)
+        for k, v in stats.items():
+            assert np.isfinite(v), (name, k, v)
+        assert stats["unique_blocks"] >= 1, name

@@ -1,0 +1,207 @@
+"""Corpus-scale sweep scheduler: planning, bit-identity, device sharding.
+
+The tentpole contract (ISSUE 4 / DESIGN.md §8): ``sweep_scheduled``
+buckets a heterogeneous trace corpus into fixed-geometry lane groups so
+the whole corpus runs through ONE compiled executable per config, its
+per-trace results are bit-identical to the serial ``simulate``, and
+sharding the lane axis over devices changes nothing but wall-clock —
+per-lane results stay bit-identical to the single-device path (pinned
+here on a forced 4-device CPU subprocess).
+"""
+
+import ast
+import inspect
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.cache import SimConfig, plan_sweep, simulate, sweep_scheduled
+from repro.cache.sweep import DEFAULT_LANE_WIDTH, reset_runners
+from repro.core import MithrilConfig
+from repro.traces import mixed
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+CFG = SimConfig(capacity=128, use_mithril=True, use_amp=True,
+                mithril=MithrilConfig(min_support=2, max_support=6,
+                                      lookahead=30, rec_buckets=256,
+                                      rec_ways=4, mine_rows=32,
+                                      pf_buckets=256, pf_ways=4))
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # heterogeneous lengths spanning several chunk multiples so the plan
+    # builds multiple groups with different padded time axes
+    return {f"t{i:02d}": mixed(220 + 173 * i, w_seq=0.3, w_assoc=0.4,
+                               w_zipf=0.3, seed=40 + i) for i in range(7)}
+
+
+class TestPlan:
+    def test_groups_cover_all_traces_once(self):
+        lengths = np.array([900, 100, 500, 700, 300])
+        plan = plan_sweep(lengths, lane_width=2, chunk=256, n_shards=1)
+        seen = [i for g in plan.groups for i in g.indices]
+        assert sorted(seen) == list(range(5))
+        # longest-first bucketing: first group holds the longest traces
+        assert set(plan.groups[0].indices) == {0, 3}
+
+    def test_padded_t_is_chunk_multiple_and_covers_group(self):
+        lengths = np.array([900, 100, 500, 700, 300])
+        plan = plan_sweep(lengths, lane_width=2, chunk=256, n_shards=1)
+        for g in plan.groups:
+            assert g.padded_t % plan.chunk == 0
+            assert g.padded_t >= lengths[list(g.indices)].max()
+
+    def test_lane_width_rounds_to_shards(self):
+        plan = plan_sweep(np.array([50] * 10), lane_width=3, chunk=64,
+                          n_shards=4)
+        assert plan.lane_width == 4
+        assert plan.n_shards == 4
+
+    def test_chunk_capped_at_longest_trace(self):
+        plan = plan_sweep(np.array([70, 40]), chunk=4096, n_shards=1)
+        assert plan.chunk == 70
+        assert plan.groups[0].padded_t == 70
+
+    def test_defaults(self):
+        plan = plan_sweep(np.array([100] * 40), n_shards=1)
+        assert plan.lane_width == DEFAULT_LANE_WIDTH
+        with pytest.raises(ValueError, match="at least one"):
+            plan_sweep(np.array([], np.int64))
+
+
+class TestScheduledSweep:
+    def test_bit_identical_to_simulate_one_compile(self, corpus):
+        reset_runners()
+        res = sweep_scheduled(CFG, corpus, lane_width=3, chunk=256)
+        # one (chunk, lane_width) shape serves every group: the whole
+        # corpus costs at most 2 new executables (ISSUE 4 acceptance)
+        assert 0 < res.compiles <= 2, res.compiles
+        for i, (name, trace) in enumerate(corpus.items()):
+            ref = simulate(CFG, trace)
+            got = res.result(i)
+            for field, a, b in zip(ref.stats._fields, got.stats, ref.stats):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"stats.{field} diverged on {name}")
+            np.testing.assert_array_equal(
+                got.hit_curve, np.asarray(ref.hit_curve),
+                err_msg=f"hit curve diverged on {name}")
+
+    def test_matches_unscheduled_sweep_any_lane_width(self, corpus):
+        """Lane grouping is invisible in the results: every lane width
+        (including short final groups padded with empty lanes) produces
+        the same stats in the same original-trace order."""
+        a = sweep_scheduled(CFG, corpus, lane_width=3, chunk=256)
+        b = sweep_scheduled(CFG, corpus, lane_width=7, chunk=256)
+        for field, x, y in zip(a.stats._fields, a.stats, b.stats):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"stats.{field} depends on lane width")
+        np.testing.assert_array_equal(a.hit_curve, b.hit_curve)
+
+    def test_accepts_padded_batch_input(self, corpus):
+        from repro.cache import pad_traces
+        suite = pad_traces(corpus)
+        a = sweep_scheduled(CFG, corpus, lane_width=3, chunk=256)
+        b = sweep_scheduled(CFG, suite, lane_width=3, chunk=256)
+        np.testing.assert_array_equal(a.hit_curve, b.hit_curve)
+        np.testing.assert_array_equal(np.asarray(a.stats.hits),
+                                      np.asarray(b.stats.hits))
+
+    def test_rejects_conflicting_lengths(self, corpus):
+        """Suite-like inputs carry their own lengths; an explicit
+        lengths argument alongside them must raise, not silently win
+        or lose."""
+        from repro.cache import pad_traces
+        suite = pad_traces(corpus)
+        for traces in (corpus, suite):
+            with pytest.raises(ValueError, match="lengths"):
+                sweep_scheduled(CFG, traces,
+                                lengths=np.ones(len(corpus), np.int64))
+
+
+def test_sharded_sweep_bit_identical_to_single_device():
+    """Lane-axis device sharding must be invisible in the results.
+
+    jax's device count is fixed at backend init, so the 4-device CPU
+    check runs in a subprocess with --xla_force_host_platform_device_count.
+    """
+    script = textwrap.dedent("""
+        import numpy as np
+        from repro.cache import SimConfig, sweep_scheduled
+        from repro.core import MithrilConfig
+        from repro.traces import mixed
+        import jax
+        assert jax.local_device_count() == 4, jax.local_device_count()
+        traces = {f"t{i}": mixed(250 + 111 * i, 0.3, 0.4, 0.3, seed=60 + i)
+                  for i in range(8)}
+        cfg = SimConfig(capacity=64, use_mithril=True, use_amp=True,
+                        mithril=MithrilConfig(
+                            min_support=2, max_support=4, lookahead=20,
+                            rec_buckets=128, rec_ways=2, mine_rows=16,
+                            pf_buckets=128, pf_ways=2))
+        single = sweep_scheduled(cfg, traces, lane_width=8, chunk=128,
+                                 shard=False)
+        sharded = sweep_scheduled(cfg, traces, lane_width=8, chunk=128,
+                                  shard=True)
+        for f, a, b in zip(single.stats._fields, single.stats,
+                           sharded.stats):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f)
+        np.testing.assert_array_equal(single.hit_curve, sharded.hit_curve)
+        assert sharded.compiles == 1, sharded.compiles
+        print("SHARDED-OK", sharded.compiles)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-OK" in out.stdout
+
+
+def _calls_cond_or_switch(src: str) -> bool:
+    """True when the code CALLS lax.cond / lax.switch (AST-level, so
+    docstrings and comments that merely mention them don't count)."""
+    tree = ast.parse(textwrap.dedent(src))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in ("cond", "switch"):
+            base = f.value
+            if (isinstance(base, ast.Name) and base.id == "lax") or \
+                    (isinstance(base, ast.Attribute) and base.attr == "lax"):
+                return True
+    return False
+
+
+def test_no_cond_in_request_path_sources():
+    """ISSUE 4 acceptance: no lax.cond / lax.switch anywhere in the
+    vmapped request step — the record path (PR 3) and now AMP are all
+    scatter form. The mining BARRIERS (core.mithril maybe_mine /
+    mine_batched) legitimately keep theirs: they run outside vmap."""
+    import repro.cache.amp
+    import repro.cache.base
+    import repro.cache.pg
+    from repro.cache.simulator import build_segments
+    from repro.core.mithril import add_association, record_event
+    sources = {
+        "cache/amp.py": inspect.getsource(repro.cache.amp),
+        "cache/base.py": inspect.getsource(repro.cache.base),
+        "cache/pg.py": inspect.getsource(repro.cache.pg),
+        "simulator.build_segments": inspect.getsource(build_segments),
+        "mithril.record_event": inspect.getsource(record_event),
+        "mithril.add_association": inspect.getsource(add_association),
+    }
+    for name, src in sources.items():
+        assert not _calls_cond_or_switch(src), \
+            f"{name} reintroduced a per-request cond/switch"
