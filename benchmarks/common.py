@@ -10,20 +10,18 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 
-from repro.cache import SimConfig, SweepResult, sweep
+from repro.cache import SimConfig, SweepPlan, SweepResult
 from repro.cache.base import PF_AMP, PF_MITHRIL, PF_PG
 from repro.configs.mithril_paper import SUITE_MITHRIL
-from repro.traces import padded_suite
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 CAPACITY = 512          # blocks (the paper's 256MB at 4KB blocks, scaled to
                         # the synthetic LBA space so LRU spans 10-99% HR)
-TRACE_LEN = 40_000
 
 
 def configs(capacity: int = CAPACITY) -> Dict[str, SimConfig]:
@@ -58,7 +56,7 @@ def pf_src_of(cfg: SimConfig) -> int:
 # --------------------------------------------------------------------------
 
 _TELEMETRY: List[dict] = []
-_SUITE_MEMO: Dict[tuple, tuple] = {}
+_PACKER: List[dict] = []
 
 
 def record_sweep(job: str, config: str, cfg: SimConfig,
@@ -94,39 +92,39 @@ def sweep_telemetry() -> List[dict]:
     return list(_TELEMETRY)
 
 
+def record_packer(job: str, plan: SweepPlan, scale: str,
+                  trace_len: int) -> None:
+    """Log one schedule's packer-efficiency stats for BENCH json.
+
+    The plan depends only on the corpus geometry, so repeated calls for
+    the same (job, trace_len) — e.g. one per fig6 capacity — record
+    exactly once.
+    """
+    if any(p["job"] == job and p["trace_len"] == trace_len
+           for p in _PACKER):
+        return
+    entry = {"job": job, "scale": scale, "trace_len": trace_len,
+             **plan.packer_stats()}
+    _PACKER.append(entry)
+    print(f"  [{job}] packer: widths={entry['widths']} "
+          f"groups={entry['n_groups']} waste={entry['waste_ratio']:.4f} "
+          f"(fixed-width {entry['fixed_waste_ratio']:.4f}, "
+          f"reduction {entry['reduction_vs_fixed']:.4f})")
+
+
+def packer_telemetry() -> List[dict]:
+    return list(_PACKER)
+
+
 def write_bench_json(meta: dict, jobs: List[dict]) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_sweep.json")
     with open(path, "w") as f:
         json.dump({"meta": meta, "jobs": jobs,
-                   "sweeps": sweep_telemetry()}, f, indent=2)
+                   "sweeps": sweep_telemetry(),
+                   "packer": packer_telemetry()}, f, indent=2)
     print(f"wrote {path}")
     return path
-
-
-def run_sweep(job: str, names, n_traces: int = 20,
-              trace_len: int = TRACE_LEN, capacity: int = CAPACITY,
-              ) -> Tuple[List[str], Dict[str, SweepResult]]:
-    """Sweep the chosen config names over the padded synthetic suite.
-
-    Returns ``(trace_names, {config: SweepResult})``. Sweep results are
-    memoized per (config, suite geometry): jobs that read the same grid
-    (table1 and fig34) share one simulation pass.
-    """
-    cfgs = {k: v for k, v in configs(capacity).items() if k in names}
-    missing = set(names) - set(cfgs)
-    if missing:
-        raise KeyError(f"unknown config names: {sorted(missing)}")
-    tnames, blocks, lengths = padded_suite(trace_len, n_traces)
-    out = {}
-    for cname in names:
-        key = (cname, capacity, n_traces, trace_len)
-        if key not in _SUITE_MEMO:
-            res = sweep(cfgs[cname], blocks, lengths)
-            record_sweep(job, cname, cfgs[cname], res)
-            _SUITE_MEMO[key] = res
-        out[cname] = _SUITE_MEMO[key]
-    return list(tnames), out
 
 
 def write_csv(fname: str, header: str, rows):

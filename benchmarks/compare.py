@@ -20,7 +20,11 @@ Policy (make CI *compare* trajectories, not just archive them):
   WARNING only — CI machines are noisy;
 * sweeps missing from the baseline are reported and skipped (new
   benchmarks seed their own trajectory on the next baseline refresh);
-  sweeps missing from the fresh run FAIL (a benchmark silently died).
+  sweeps missing from the fresh run FAIL (a benchmark silently died);
+* packer efficiency (ISSUE 5): the lane packer's padded-waste ratio is
+  pure arithmetic over the corpus lengths, so with the same geometry
+  and device count any waste-ratio regression vs the baseline is a
+  scheduling-semantics change and FAILS; improvements are noted.
 
 Refresh a geometry's baseline by copying a trusted run of that suite:
 
@@ -53,8 +57,10 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     fresh_ix, base_ix = _index(fresh), _index(baseline)
 
     fresh_meta, base_meta = fresh.get("meta", {}), baseline.get("meta", {})
-    geometry = ("quick", "n_traces", "trace_len", "corpus_scale",
-                "corpus_len")
+    # keys present in BOTH metas must agree; n_traces (legacy synthetic
+    # suite width) was dropped from fresh metas in ISSUE 5 — old
+    # baselines that still carry it are compared on the live keys only
+    geometry = ("quick", "trace_len", "corpus_scale", "corpus_len")
     if any(k in fresh_meta and k in base_meta
            and fresh_meta[k] != base_meta[k] for k in geometry):
         notes.append(
@@ -95,6 +101,33 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     for key in fresh_ix.keys() - base_ix.keys():
         notes.append(f"{key}: not in baseline (new sweep, unchecked)")
 
+    # packer efficiency: deterministic given geometry + device count
+    same_devices = (fresh_meta.get("n_devices") is not None
+                    and fresh_meta.get("n_devices")
+                    == base_meta.get("n_devices"))
+    base_pk = {p["job"]: p for p in baseline.get("packer", [])}
+    for p in fresh.get("packer", []):
+        b = base_pk.get(p["job"])
+        if b is None:
+            notes.append(f"packer {p['job']}: not in baseline "
+                         "(new schedule, unchecked)")
+            continue
+        if not base_ix:     # geometry mismatch cleared the comparison
+            continue
+        if not same_devices or b.get("trace_len") != p.get("trace_len"):
+            notes.append(f"packer {p['job']}: geometry/devices differ, "
+                         "waste ratio not compared")
+            continue
+        if p["waste_ratio"] > b["waste_ratio"] + HIT_TOL:
+            failures.append(
+                f"packer {p['job']}: padded-waste ratio regressed "
+                f"{b['waste_ratio']:.6f} -> {p['waste_ratio']:.6f}")
+        elif p["waste_ratio"] < b["waste_ratio"] - HIT_TOL:
+            notes.append(
+                f"packer {p['job']}: padded-waste ratio improved "
+                f"{b['waste_ratio']:.6f} -> {p['waste_ratio']:.6f} "
+                "(baseline refresh will pin it)")
+
     failed_jobs = [j for j in fresh.get("jobs", [])
                    if j.get("status") != "ok"]
     for j in failed_jobs:
@@ -113,7 +146,7 @@ def baseline_path(fresh_meta: dict) -> str:
     return os.path.join(BENCH_DIR, "BENCH_baseline.json")
 
 
-def main(argv=None) -> int:
+def _parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh",
                     default=os.path.join(BENCH_DIR, "BENCH_sweep.json"))
@@ -122,7 +155,11 @@ def main(argv=None) -> int:
                          ".json for the fresh run's suite)")
     ap.add_argument("--wallclock-warn", type=float, default=0.20,
                     help="warn when wall-clock regresses past this fraction")
-    a = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> int:
+    a = _parser().parse_args(argv)
 
     with open(a.fresh) as f:
         fresh = json.load(f)

@@ -2,10 +2,14 @@
 
 The paper's headline numbers (55% avg hit-ratio gain over LRU, 36% over
 AMP) are averages over 135 block-storage traces. This job sweeps the
-corpus registry (``repro.traces.corpus``) through the lane scheduler
-(``cache.sweep.sweep_scheduled``): traces bucket by length into
-fixed-geometry lane groups, the lane axis shards over local devices,
-and the whole corpus costs one or two compiles per config.
+corpus registry through the scheduled figure engine
+(``benchmarks.corpus_figures`` -> ``cache.sweep.sweep_scheduled``): the
+cost-model packer buckets traces into variable-width lane groups, the
+lane axis shards over local devices, and the whole corpus costs at most
+two compiles per config — shared with every figure driver reading the
+same configs. Emits the per-trace CSV (family + degenerate flags — a
+len<=1 trace is surfaced, never silently dropped), the improvement
+summary, the per-family breakdown, and the packer-efficiency stats.
 
     PYTHONPATH=src python -m benchmarks.corpus_sweep --scale quick
 
@@ -15,70 +19,55 @@ corpus size).
 
 from __future__ import annotations
 
-import argparse
-
-import numpy as np
-
-from repro.cache import plan_sweep, sweep_scheduled
-from repro.traces import SCALES, corpus_suite
-
-from .common import configs, record_sweep, write_csv
+from .common import write_csv
+from .corpus_figures import (IMPROVEMENT_HEADER, corpus_run, figure_parser,
+                             improvement_summary, write_family_csv)
 
 NAMES = ["lru", "mithril-lru", "pg-lru", "mithril-amp-lru"]
 
-DEFAULT_LEN = {"quick": 4_000, "mid": 20_000, "full": 50_000}
-
 
 def main(scale: str = "quick", trace_len: int | None = None) -> str:
-    trace_len = trace_len or DEFAULT_LEN[scale]
-    names, blocks, lengths = corpus_suite(scale, trace_len)
-    plan = plan_sweep(lengths)
+    run = corpus_run(scale, trace_len)
     job = f"corpus_{scale}"
-    print(f"  [{job}] {len(names)} traces (len {lengths.min()}..."
-          f"{lengths.max()}), {len(plan.groups)} groups x "
-          f"{plan.lane_width} lanes, chunk={plan.chunk}, "
-          f"shards={plan.n_shards}")
+    n_degenerate = int(run.degenerate.sum())
+    print(f"  [{job}] {run.n_traces} traces (len {run.lengths.min()}..."
+          f"{run.lengths.max()}), {len(run.plan.groups)} groups, "
+          f"widths={list(run.plan.shape_widths)}, chunk={run.plan.chunk}, "
+          f"shards={run.plan.n_shards}")
+    if n_degenerate:
+        print(f"  [{job}] {n_degenerate} degenerate trace(s) (len<=1) "
+              "surfaced via the degenerate column, not dropped")
 
-    cfgs = configs()
-    results = {}
-    for cname in NAMES:
-        res = sweep_scheduled(cfgs[cname], blocks, lengths, plan=plan)
-        record_sweep(job, cname, cfgs[cname], res)
-        results[cname] = res
-
+    results = run.results(NAMES)
     hrs = {c: results[c].hit_ratios() for c in NAMES}
-    rows = [[names[i], int(lengths[i])]
+    rows = [[run.names[i], run.families[i], int(run.lengths[i]),
+             bool(run.degenerate[i])]
             + [round(float(hrs[c][i]), 6) for c in NAMES]
-            for i in range(len(names))]
+            for i in range(run.n_traces)]
     write_csv(f"corpus_{scale}.csv",
-              "trace,requests," + ",".join(NAMES), rows)
+              "trace,family,requests,degenerate," + ",".join(NAMES), rows)
 
-    # relative improvement is only meaningful where LRU has a real
-    # baseline: the corpus deliberately contains reuse-free sequential
-    # workloads whose LRU hit ratio is ~0 (a ratio there is unbounded),
-    # so those traces report through the absolute delta column instead
-    eligible = hrs["lru"] >= 0.01
-    srows = []
-    for c in NAMES[1:]:
-        delta = hrs[c] - hrs["lru"]
-        rel = delta[eligible] / hrs["lru"][eligible]
-        srows.append([c,
-                      f"{rel.mean() * 100:.1f}%" if eligible.any() else "",
-                      f"{rel.max() * 100:.1f}%" if eligible.any() else "",
-                      int(eligible.sum()),
-                      f"{delta.mean() * 100:.1f}pp"])
-    write_csv(f"corpus_{scale}_summary.csv",
-              "algorithm,avg_improvement,max_improvement,"
-              "traces_with_lru_baseline,avg_abs_delta", srows)
+    write_csv(f"corpus_{scale}_summary.csv", IMPROVEMENT_HEADER,
+              improvement_summary(hrs, run.degenerate))
+    write_family_csv(f"corpus_{scale}_by_family.csv", run.families, hrs)
+
+    st = run.plan.packer_stats()
+    write_csv(f"corpus_{scale}_packer.csv",
+              ",".join(st), [[st[k] if not isinstance(st[k], list)
+                              else " ".join(map(str, st[k]))
+                              for k in st]])
 
     worst = max(max(results[c].compiles, 0) for c in NAMES)
-    return f"traces={len(names)};max_compiles={worst}"
+    return (f"traces={run.n_traces};max_compiles={worst};"
+            f"degenerate={n_degenerate};"
+            f"packer_waste={st['waste_ratio']};"
+            f"packer_reduction={st['reduction_vs_fixed']}")
+
+
+def _parser():
+    return figure_parser(__doc__)
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
-    ap.add_argument("--trace-len", type=int, default=None,
-                    help="nominal requests per trace (default per scale)")
-    a = ap.parse_args()
+    a = _parser().parse_args()
     print(main(a.scale, a.trace_len))

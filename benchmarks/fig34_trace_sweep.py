@@ -4,42 +4,68 @@ Fig 3: MITHRIL vs PG per trace (paper: Pearson r(LRU,PG) ~ 0.99 while
 r(LRU, MITHRIL) is much lower — MITHRIL's wins don't just track LRU).
 Fig 4: MITHRIL-LRU vs AMP and MITHRIL-AMP vs AMP, sorted by AMP.
 
-Shares the batched sweep pass with table1 (``run_sweep`` memoizes per
-suite geometry), so this job is pure post-processing when both run.
+Corpus-native: per-trace rows cover the corpus registry slice (family
+and degenerate flags included), correlations are reported overall and
+per workload family, and the sweeps are shared with every other figure
+through ``benchmarks.corpus_figures`` (pure post-processing when table1
+already ran).
+
+    PYTHONPATH=src python -m benchmarks.fig34_trace_sweep --scale quick
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from .common import run_sweep, write_csv
+from .common import write_csv
+from .corpus_figures import corpus_run, figure_parser, write_family_csv
 
 NAMES = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp-lru"]
 
 
-def main(n_traces: int = 20, trace_len: int = 40_000):
-    tnames, res = run_sweep("fig34_trace_sweep", NAMES, n_traces, trace_len)
-    hrs = {k: res[k].hit_ratios() for k in NAMES}
-    rows = [[tname] + [f"{hrs[k][i]:.4f}" for k in NAMES]
-            for i, tname in enumerate(tnames)]
-    write_csv("fig34_per_trace.csv", "trace," + ",".join(NAMES), rows)
+def _pearson(a, b) -> float:
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    if len(a) < 2 or a.std() == 0 or b.std() == 0:
+        return float("nan")
+    return float(np.corrcoef(a, b)[0, 1])
 
-    def pearson(a, b):
-        return float(np.corrcoef(np.asarray(a), np.asarray(b))[0, 1])
 
-    r_pg = pearson(hrs["lru"], hrs["pg-lru"])
-    r_mith = pearson(hrs["lru"], hrs["mithril-lru"])
-    write_csv("fig34_correlation.csv", "pair,pearson_r",
-              [["lru_vs_pg", f"{r_pg:.3f}"],
-               ["lru_vs_mithril", f"{r_mith:.3f}"]])
+def main(scale: str = "quick", trace_len: int | None = None):
+    run = corpus_run(scale, trace_len)
+    hrs = run.hit_ratios(NAMES)
+
+    rows = [[run.names[i], run.families[i], int(run.lengths[i]),
+             bool(run.degenerate[i])]
+            + [f"{hrs[k][i]:.4f}" for k in NAMES]
+            for i in range(run.n_traces)]
+    write_csv("fig34_per_trace.csv",
+              "trace,family,requests,degenerate," + ",".join(NAMES), rows)
+    write_family_csv("fig34_by_family.csv", run.families, hrs)
+
+    crows = [["all", f"{_pearson(hrs['lru'], hrs['pg-lru']):.3f}",
+              f"{_pearson(hrs['lru'], hrs['mithril-lru']):.3f}"]]
+    for fam in dict.fromkeys(run.families):
+        m = run.families == fam
+        crows.append([fam,
+                      f"{_pearson(hrs['lru'][m], hrs['pg-lru'][m]):.3f}",
+                      f"{_pearson(hrs['lru'][m], hrs['mithril-lru'][m]):.3f}"])
+    write_csv("fig34_correlation.csv",
+              "family,pearson_lru_vs_pg,pearson_lru_vs_mithril", crows)
+
+    r_pg, r_mith = float(crows[0][1]), float(crows[0][2])
     print(f"pearson r LRU~PG={r_pg:.3f}  LRU~MITHRIL={r_mith:.3f}")
     wins = int((hrs["mithril-lru"] >= hrs["amp-lru"]).sum())
     not_worse = int((hrs["mithril-amp-lru"] >= hrs["amp-lru"] - 0.02).sum())
-    print(f"MITHRIL-LRU >= AMP on {wins}/{n_traces}; "
-          f"MITHRIL-AMP >= AMP-2% on {not_worse}/{n_traces}")
+    print(f"MITHRIL-LRU >= AMP on {wins}/{run.n_traces}; "
+          f"MITHRIL-AMP >= AMP-2% on {not_worse}/{run.n_traces}")
     return {"r_pg": r_pg, "r_mith": r_mith, "wins": wins,
             "not_worse": not_worse}
 
 
+def _parser():
+    return figure_parser(__doc__)
+
+
 if __name__ == "__main__":
-    main()
+    a = _parser().parse_args()
+    main(a.scale, a.trace_len)

@@ -1,28 +1,73 @@
-"""Paper Fig 5: six representative traces (large / modest / small gains)."""
+"""Paper Fig 5: representative traces (large / modest / small gains).
+
+Corpus-native: instead of six hand-picked synthetic traces, the
+representatives are SELECTED from the corpus registry by measured
+regime — the two largest, two median, and two smallest
+MITHRIL-over-LRU gains — from the same scheduled sweeps every other
+figure shares, then reported against the trace's maximum obtainable hit
+ratio (Belady-style cold-miss bound) for all seven configs.
+
+    PYTHONPATH=src python -m benchmarks.fig5_representative --scale quick
+"""
 
 from __future__ import annotations
 
-from repro.cache import max_hit_ratio, simulate
-from repro.traces import representative_traces
+import numpy as np
 
-from .common import configs, write_csv
+from repro.cache import max_hit_ratio
+
+from .common import write_csv
+from .corpus_figures import corpus_run, figure_parser
+
+NAMES = ["lru", "fifo", "amp-lru", "pg-lru", "mithril-lru",
+         "mithril-fifo", "mithril-amp-lru"]
+REGIMES = ("large_gain", "modest_gain", "small_gain")
 
 
-def main(trace_len: int = 40_000):
-    cfgs = configs()
-    names = ["lru", "fifo", "amp-lru", "pg-lru", "mithril-lru",
-             "mithril-fifo", "mithril-amp-lru"]
+def select_representatives(gain: np.ndarray, per_regime: int = 2):
+    """Indices of the top / median / bottom ``per_regime`` gains."""
+    order = np.argsort(-gain, kind="stable")
+    n = len(order)
+    per_regime = max(1, min(per_regime, n // 3)) if n >= 3 else 1
+    mid = (n - per_regime) // 2
+    picks = {
+        "large_gain": list(order[:per_regime]),
+        "modest_gain": list(order[mid: mid + per_regime]),
+        "small_gain": list(order[-per_regime:]),
+    }
+    seen: set = set()
+    out = []
+    for regime in REGIMES:
+        for i in picks[regime]:
+            if int(i) not in seen:
+                seen.add(int(i))
+                out.append((regime, int(i)))
+    return out
+
+
+def main(scale: str = "quick", trace_len: int | None = None):
+    run = corpus_run(scale, trace_len)
+    hrs = run.hit_ratios(NAMES)
+    gain = hrs["mithril-lru"] - hrs["lru"]
+
     rows = []
-    for tname, trace in representative_traces(trace_len).items():
-        hr = {}
-        for n in names:
-            hr[n] = simulate(cfgs[n], trace).hit_ratio
-        rows.append([tname, f"{max_hit_ratio(trace):.4f}"] +
-                    [f"{hr[n]:.4f}" for n in names])
-        print(tname, {n: round(hr[n], 3) for n in names})
-    write_csv("fig5_representative.csv", "trace,max_hr," + ",".join(names),
+    for regime, i in select_representatives(gain):
+        trace = run.blocks[i, : int(run.lengths[i])]
+        rows.append([run.names[i], run.families[i], int(run.lengths[i]),
+                     regime, f"{max_hit_ratio(trace):.4f}"]
+                    + [f"{hrs[k][i]:.4f}" for k in NAMES])
+        print(rows[-1][0], regime,
+              {k: round(float(hrs[k][i]), 3) for k in NAMES})
+    write_csv("fig5_representative.csv",
+              "trace,family,requests,regime,max_hr," + ",".join(NAMES),
               rows)
+    return rows
+
+
+def _parser():
+    return figure_parser(__doc__)
 
 
 if __name__ == "__main__":
-    main()
+    a = _parser().parse_args()
+    main(a.scale, a.trace_len)

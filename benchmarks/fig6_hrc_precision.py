@@ -1,48 +1,63 @@
 """Paper Fig 6: hit-ratio curve + prefetch precision across cache sizes.
 
-Each capacity is its own config *shape* (one compile per capacity x
-config); the single Fig-6 trace runs through the sweep engine as a
-batch of one so telemetry lands in BENCH_sweep.json like every other job.
+Corpus-native: each capacity sweeps the corpus registry's nested quick
+slice (16 workloads, every family — capacity grids on the full slice
+would multiply the compile budget for no extra claim coverage) through
+the scheduled engine; reported as corpus means with a per-family
+breakdown per capacity. Each capacity is its own config *shape*, so the
+grid costs one scheduled sweep per (capacity, config).
+
+    PYTHONPATH=src python -m benchmarks.fig6_hrc_precision --scale quick
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.cache import sweep_grid
 from repro.cache.base import PF_MITHRIL, PF_PG
-from repro.traces import mixed
 
-from .common import configs, record_sweep, write_csv
+from .common import write_csv
+from .corpus_figures import (DEFAULT_LEN, corpus_run, family_rows,
+                             figure_parser)
 
 SIZES = (64, 128, 256, 512, 1024, 2048)
+NAMES = ("lru", "pg-lru", "mithril-lru")
+JOB = "fig6_hrc_precision"
 
 
-def main(trace_len: int = 40_000):
-    trace = mixed(trace_len, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=94)
-    blocks = trace[None, :]
-    lengths = np.array([len(trace)])
-    rows = []
+def main(scale: str = "quick", trace_len: int | None = None):
+    # nested quick slice at the suite's trace length (scales nest, so
+    # these 16 workloads exist unchanged at mid/full)
+    tlen = trace_len or DEFAULT_LEN[scale]
+    rows, fam_rows = [], []
     for cap in SIZES:
-        cfgs = configs(cap)
-        sel = {k: cfgs[k] for k in ("lru", "pg-lru", "mithril-lru")}
-        res = sweep_grid(sel, blocks, lengths)
-        for cname, r in res.items():
-            record_sweep("fig6_hrc_precision", f"{cname}@{cap}",
-                         sel[cname], r)
-        lru, pg, mith = res["lru"], res["pg-lru"], res["mithril-lru"]
-        hr = {k: float(r.hit_ratios()[0]) for k, r in res.items()}
-        p_pg = float(pg.precisions(PF_PG)[0])
-        p_mith = float(mith.precisions(PF_MITHRIL)[0])
-        rows.append([cap, f"{hr['lru']:.4f}", f"{hr['pg-lru']:.4f}",
-                     f"{hr['mithril-lru']:.4f}",
-                     f"{p_pg:.4f}", f"{p_mith:.4f}"])
-        print(f"cap={cap}: lru={hr['lru']:.3f} pg={hr['pg-lru']:.3f} "
-              f"mith={hr['mithril-lru']:.3f} "
-              f"prec pg={p_pg:.3f} mith={p_mith:.3f}")
+        run = corpus_run("quick", tlen, capacity=cap)
+        res = {c: run.extra_result(run.config(c), f"{c}@{cap}", JOB)
+               for c in NAMES}
+        hr = {c: r.hit_ratios() for c, r in res.items()}
+        prec = {"pg-lru": res["pg-lru"].precisions(PF_PG),
+                "mithril-lru": res["mithril-lru"].precisions(PF_MITHRIL)}
+        rows.append([cap] + [f"{float(np.mean(hr[c])):.4f}" for c in NAMES]
+                    + [f"{float(np.nanmean(prec[c])):.4f}" for c in prec])
+        cols = {"hr_lru": hr["lru"], "hr_pg": hr["pg-lru"],
+                "hr_mithril": hr["mithril-lru"],
+                "prec_pg": prec["pg-lru"], "prec_mithril":
+                    prec["mithril-lru"]}
+        fam_rows += [[cap] + r for r in family_rows(run.families, cols)]
+        print(f"cap={cap}: " + " ".join(
+            f"{c}={float(np.mean(hr[c])):.3f}" for c in NAMES))
     write_csv("fig6_hrc_precision.csv",
               "capacity,hr_lru,hr_pg,hr_mithril,prec_pg,prec_mithril", rows)
+    write_csv("fig6_by_family.csv",
+              "capacity,family,n,hr_lru,hr_pg,hr_mithril,"
+              "prec_pg,prec_mithril", fam_rows)
+    return rows
+
+
+def _parser():
+    return figure_parser(__doc__)
 
 
 if __name__ == "__main__":
-    main()
+    a = _parser().parse_args()
+    main(a.scale, a.trace_len)

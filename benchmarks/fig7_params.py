@@ -1,9 +1,13 @@
 """Paper Fig 7: parameter sweeps (S, Delta, P, M, R, recording location).
 
-The whole parameter grid is built up front and run through ``sweep_grid``:
-variants that collapse onto the baseline config (e.g. the pivot of each
-sweep axis equals SUITE_MITHRIL) share one compiled executable via the
-engine's per-config runner cache instead of recompiling.
+Corpus-native: the whole parameter grid runs over the corpus registry's
+nested quick slice (16 workloads, every family) through the scheduled
+engine — one scheduled sweep per distinct config, and variants that
+collapse onto the baseline (a sweep axis pivot equal to SUITE_MITHRIL)
+share one pass outright because the engine memoizes by config value.
+Per-family hit ratios land in ``fig7_by_family.csv``.
+
+    PYTHONPATH=src python -m benchmarks.fig7_params --scale quick
 """
 
 from __future__ import annotations
@@ -12,13 +16,16 @@ import dataclasses
 
 import numpy as np
 
-from repro.cache import SimConfig, sweep_grid
+from repro.cache import SimConfig
 from repro.cache.base import PF_MITHRIL
 from repro.configs.mithril_paper import SUITE_MITHRIL
 from repro.core import MithrilConfig
-from repro.traces import mixed
 
-from .common import CAPACITY, record_sweep, write_csv
+from .common import CAPACITY, write_csv
+from .corpus_figures import (DEFAULT_LEN, corpus_run, family_rows,
+                             figure_parser)
+
+JOB = "fig7_params"
 
 
 def _sim(mith: MithrilConfig) -> SimConfig:
@@ -50,26 +57,33 @@ def param_grid() -> dict:
     return grid
 
 
-def main(trace_len: int = 30_000):
-    trace = mixed(trace_len, w_seq=0.2, w_assoc=0.55, w_zipf=0.25, seed=94)
-    blocks = trace[None, :]
-    lengths = np.array([len(trace)])
+def main(scale: str = "quick", trace_len: int | None = None):
+    # nested quick slice at the suite's trace length (scales nest)
+    run = corpus_run("quick", trace_len or DEFAULT_LEN[scale])
     grid = param_grid()
-    res = sweep_grid({f"{p}={v}": cfg for (p, v), cfg in grid.items()},
-                     blocks, lengths)
 
-    rows = []
+    rows, fam_rows = [], []
     for (param, value), cfg in grid.items():
-        r = res[f"{param}={value}"]
-        record_sweep("fig7_params", f"{param}={value}", cfg, r)
-        hr = float(r.hit_ratios()[0])
-        pr = float(r.precisions(PF_MITHRIL)[0])
-        rows.append([param, value, f"{hr:.4f}", f"{pr:.4f}"])
+        r = run.extra_result(cfg, f"{param}={value}", JOB)
+        hr, prec = r.hit_ratios(), r.precisions(PF_MITHRIL)
+        rows.append([param, value, f"{float(np.mean(hr)):.4f}",
+                     f"{float(np.nanmean(prec)):.4f}"])
+        fam_rows += [[param, value] + fr for fr in
+                     family_rows(run.families,
+                                 {"hit_ratio": hr, "precision": prec})]
 
     for r in rows:
         print(r)
     write_csv("fig7_params.csv", "param,value,hit_ratio,precision", rows)
+    write_csv("fig7_by_family.csv",
+              "param,value,family,n,hit_ratio,precision", fam_rows)
+    return rows
+
+
+def _parser():
+    return figure_parser(__doc__)
 
 
 if __name__ == "__main__":
-    main()
+    a = _parser().parse_args()
+    main(a.scale, a.trace_len)

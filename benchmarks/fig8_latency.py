@@ -64,5 +64,13 @@ def main(trace_len: int = 40_000):
     return means
 
 
+def _parser():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace-len", type=int, default=40_000,
+                    help="requests in the synthetic latency trace")
+    return ap
+
+
 if __name__ == "__main__":
-    main()
+    main(_parser().parse_args().trace_len)

@@ -2,20 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.run [--suite quick|mid|full]
 
-Suites fix the whole geometry — synthetic-suite trace count/length AND
-corpus scale — so every ``BENCH_sweep.json`` is comparable against the
-matching per-geometry baseline (``BENCH_baseline_<suite>.json``,
-``benchmarks.compare``): ``quick`` is CI-sized, ``mid`` the development
-default, ``full`` runs the paper-scale 135-trace corpus. ``--quick``
-stays as an alias for ``--suite quick``.
+Suites fix the whole geometry — the corpus registry scale/length every
+figure driver sweeps (``benchmarks.corpus_figures``) AND the legacy
+synthetic trace length fig8 still uses — so every ``BENCH_sweep.json``
+is comparable against the matching per-geometry baseline
+(``BENCH_baseline_<suite>.json``, ``benchmarks.compare``): ``quick`` is
+CI-sized, ``mid`` the development default, ``full`` runs the
+paper-scale 135-trace corpus. ``--quick`` stays as an alias for
+``--suite quick``.
 
 Prints ``name,seconds,derived`` CSV summary lines, writes detailed CSVs
 to results/bench/, and emits ``results/bench/BENCH_sweep.json`` — the
 machine-readable perf trajectory (per-config hit ratios, precision,
-wall-clock, compile counts) that CI archives so future PRs can compare
-against it. (The multi-pod dry-run + roofline table have their own
-entry points: repro.launch.dryrun and benchmarks.roofline_table — they
-need the 512-device XLA flag set before jax import.)
+wall-clock, compile counts, packer efficiency) that CI archives so
+future PRs can compare against it. (The multi-pod dry-run + roofline
+table have their own entry points: repro.launch.dryrun and
+benchmarks.roofline_table — they need the 512-device XLA flag set
+before jax import.)
 """
 
 from __future__ import annotations
@@ -25,49 +28,51 @@ import time
 import traceback
 
 SUITES = {
-    # synthetic suite geometry + corpus registry scale
-    "quick": dict(n_traces=6, trace_len=20_000,
-                  corpus_scale="quick", corpus_len=4_000),
-    "mid": dict(n_traces=16, trace_len=40_000,
-                corpus_scale="mid", corpus_len=20_000),
-    "full": dict(n_traces=16, trace_len=40_000,
-                 corpus_scale="full", corpus_len=50_000),
+    # corpus registry scale + legacy synthetic length (fig8); the
+    # per-scale corpus length is pinned once, in
+    # benchmarks.corpus_figures.DEFAULT_LEN
+    "quick": dict(trace_len=20_000, corpus_scale="quick"),
+    "mid": dict(trace_len=40_000, corpus_scale="mid"),
+    "full": dict(trace_len=40_000, corpus_scale="full"),
 }
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--suite", choices=sorted(SUITES), default=None,
                     help="benchmark geometry (default: mid)")
     ap.add_argument("--quick", action="store_true",
                     help="alias for --suite quick (CI-speed)")
+    return ap
+
+
+def main(argv=None) -> None:
+    ap = _parser()
     a = ap.parse_args(argv)
     if a.quick and a.suite not in (None, "quick"):
         ap.error(f"--quick contradicts --suite {a.suite}")
     suite = a.suite or ("quick" if a.quick else "mid")
     geo = SUITES[suite]
-    n_traces, tlen = geo["n_traces"], geo["trace_len"]
+    scale, tlen = geo["corpus_scale"], geo["trace_len"]
 
-    from . import (common, corpus_sweep, expert_prefetch,
+    from . import (common, corpus_figures, corpus_sweep, expert_prefetch,
                    fig5_representative, fig6_hrc_precision, fig7_params,
                    fig8_latency, fig9_midfreq, fig34_trace_sweep,
                    kernel_micro, table1_hit_ratio, tiered_serving)
 
+    clen = corpus_figures.DEFAULT_LEN[scale]
+
     jobs = [
-        ("table1_hit_ratio",
-         lambda: table1_hit_ratio.main(n_traces, tlen)),
-        ("fig34_trace_sweep",
-         lambda: fig34_trace_sweep.main(n_traces, tlen)),
+        ("table1_hit_ratio", lambda: table1_hit_ratio.main(scale, clen)),
+        ("fig34_trace_sweep", lambda: fig34_trace_sweep.main(scale, clen)),
         ("fig5_representative",
-         lambda: fig5_representative.main(tlen)),
+         lambda: fig5_representative.main(scale, clen)),
         ("fig6_hrc_precision",
-         lambda: fig6_hrc_precision.main(tlen)),
-        ("fig7_params", lambda: fig7_params.main(min(tlen, 30_000))),
+         lambda: fig6_hrc_precision.main(scale, clen)),
+        ("fig7_params", lambda: fig7_params.main(scale, clen)),
         ("fig8_latency", lambda: fig8_latency.main(tlen)),
-        ("fig9_midfreq", lambda: fig9_midfreq.main(tlen)),
-        ("corpus_sweep",
-         lambda: corpus_sweep.main(geo["corpus_scale"],
-                                   geo["corpus_len"])),
+        ("fig9_midfreq", lambda: fig9_midfreq.main(scale, clen)),
+        ("corpus_sweep", lambda: corpus_sweep.main(scale, clen)),
         ("tiered_serving", tiered_serving.main),
         ("expert_prefetch", expert_prefetch.main),
         ("kernel_micro", kernel_micro.main),
@@ -95,9 +100,8 @@ def main(argv=None) -> None:
     import jax
     common.write_bench_json(
         meta={"suite": suite, "quick": suite == "quick",
-              "n_traces": n_traces, "trace_len": tlen,
-              "corpus_scale": geo["corpus_scale"],
-              "corpus_len": geo["corpus_len"],
+              "trace_len": tlen,
+              "corpus_scale": scale, "corpus_len": clen,
               "jax": jax.__version__,
               "backend": jax.default_backend(),
               "n_devices": jax.local_device_count(),

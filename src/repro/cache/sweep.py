@@ -14,9 +14,11 @@ compute-bound. This module instead
 * gates padded tails per trace so statistics are bit-identical to the
   per-trace ``simulate`` (``tests/test_sweep.py`` asserts this),
 * **schedules** corpus-scale suites (``plan_sweep``/``sweep_scheduled``,
-  DESIGN.md §8): traces are bucketed by length into fixed-width *lane
-  groups* — every group runs through the same ``(chunk, lane_width)``
-  executable, so a 135-trace corpus costs ONE compile per config — and
+  DESIGN.md §8–§9): the cost-model lane packer sorts traces by length
+  and packs them into variable-width *lane groups* drawn from a bounded
+  width set — every group runs through one of at most ``max_shapes``
+  compiled ``(chunk, width)`` executables (default 2), so a 135-trace
+  corpus costs one or two compiles per config — and
 * **shards** the lane axis across local devices
   (``dist.sharding.lane_specs`` + ``shard_map``): lanes are independent,
   so each device simulates its slice of the batch and per-lane results
@@ -307,8 +309,9 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
     n_traces, n_req = blocks.shape
     lengths = (np.full((n_traces,), n_req, np.int64) if lengths is None
                else np.asarray(lengths, np.int64))
-    if lengths.shape != (n_traces,) or (lengths > n_req).any():
-        raise ValueError("lengths must be (B,) and <= trace axis")
+    if lengths.shape != (n_traces,) or (lengths > n_req).any() \
+            or (lengths < 0).any():
+        raise ValueError("lengths must be (B,) within [0, trace axis]")
 
     chunk = max(1, min(chunk, n_req))
     n_chunks = -(-n_req // chunk)
@@ -338,64 +341,214 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Corpus-scale scheduler: length-bucketed lane groups, one compiled shape
+# Corpus-scale scheduler: cost-model lane packer, bounded compile shapes
 # ---------------------------------------------------------------------------
+
+DEFAULT_MAX_SHAPES = 2      # distinct lane widths (= compiled slab shapes)
+# Per-group serial-dispatch cost in lane-equivalents. Any positive value
+# stops the pure padded-steps objective from shredding the corpus into
+# width-1 groups (grouping equal-padded traces then always wins); the
+# default is deliberately small because a chunk launch costs far less
+# than one lane of chunk compute — raise it on hardware where narrow
+# lanes underfill the vector unit (DESIGN.md §9).
+DEFAULT_PACK_OVERHEAD = 0.25
+
 
 class LaneGroup(NamedTuple):
     indices: Tuple[int, ...]    # original trace positions in this group
     padded_t: int               # group time axis (a chunk multiple)
+    lane_width: int             # lanes this group pads to
 
 
 class SweepPlan(NamedTuple):
     """Device-and-shape schedule for a heterogeneous trace corpus.
 
-    Every group is padded to the SAME lane width and a chunk-multiple
-    time axis, so each group streams through the one compiled
-    ``(chunk, lane_width)`` executable; traces are bucketed by length
-    (longest first) so short traces never pay a long group's padded
-    tail. ``lane_width`` is rounded up to a multiple of ``n_shards`` so
-    the lane axis always divides the device mesh.
+    Groups are consecutive runs of the length-sorted corpus (longest
+    first), each padded to its own ``lane_width`` (from at most
+    ``max_shapes`` distinct widths — one compiled ``(chunk, width)``
+    slab per width) and a chunk-multiple time axis. Widths are chosen by
+    the cost-model packer of :func:`plan_sweep` (DESIGN.md §9) and are
+    always multiples of ``n_shards`` so the lane axis divides the device
+    mesh. ``lane_width`` is the widest group's width (the primary slab).
     """
 
     groups: Tuple[LaneGroup, ...]
-    lane_width: int
+    lane_width: int             # max group width (primary compiled shape)
     chunk: int
     n_shards: int
+    total_requests: int         # sum of valid per-trace lengths
+    fixed_lane_steps: int       # padded_lane_steps of the fixed-width plan
 
     @property
     def padded_lane_steps(self) -> int:
         """Total (lane x request) slots the schedule executes."""
-        return sum(g.padded_t for g in self.groups) * self.lane_width
+        return sum(g.padded_t * g.lane_width for g in self.groups)
+
+    @property
+    def shape_widths(self) -> Tuple[int, ...]:
+        """Distinct lane widths = distinct compiled slab shapes."""
+        return tuple(sorted({g.lane_width for g in self.groups}))
+
+    @property
+    def waste_ratio(self) -> float:
+        """Fraction of executed lane-steps that are padded-tail waste."""
+        steps = self.padded_lane_steps
+        return 1.0 - self.total_requests / steps if steps else 0.0
+
+    @property
+    def fixed_waste_ratio(self) -> float:
+        """Waste ratio of the fixed-width reference plan (same inputs)."""
+        if not self.fixed_lane_steps:
+            return 0.0
+        return 1.0 - self.total_requests / self.fixed_lane_steps
+
+    def packer_stats(self) -> Dict[str, object]:
+        """Packer-efficiency summary recorded in BENCH json."""
+        return {
+            "n_traces": sum(len(g.indices) for g in self.groups),
+            "n_groups": len(self.groups),
+            "widths": list(self.shape_widths),
+            "n_shapes": len(self.shape_widths),
+            "chunk": self.chunk,
+            "n_shards": self.n_shards,
+            "padded_lane_steps": int(self.padded_lane_steps),
+            "ideal_lane_steps": int(self.total_requests),
+            "waste_ratio": round(self.waste_ratio, 6),
+            "fixed_padded_lane_steps": int(self.fixed_lane_steps),
+            "fixed_waste_ratio": round(self.fixed_waste_ratio, 6),
+            "reduction_vs_fixed": round(
+                1.0 - (self.padded_lane_steps / self.fixed_lane_steps
+                       if self.fixed_lane_steps else 1.0), 6),
+        }
+
+
+def _width_candidates(w_max: int, n_shards: int) -> Tuple[int, ...]:
+    """Packer width ladder: ``w_max`` and its successive halvings, each
+    rounded up to a multiple of ``n_shards`` (the §4 divisibility
+    contract applied to the lane axis), deduplicated, ascending."""
+    cands = set()
+    w = w_max
+    while w >= 1:
+        cands.add(-(-w // n_shards) * n_shards)
+        if w == 1:
+            break
+        w //= 2
+    return tuple(sorted(cands))
+
+
+def _pack(padded: Sequence[int], widths: Sequence[int],
+          overhead: float) -> Tuple[float, Tuple[int, ...]]:
+    """Optimal consecutive partition of the length-sorted corpus.
+
+    ``padded[i]`` is trace ``i``'s chunk-padded length, sorted
+    descending, so a group covering positions ``[i, i+w)`` pads its time
+    axis to ``padded[i]``. Minimizes
+
+        sum_g padded_t_g * (w_g + overhead)
+
+    — the schedule's padded lane-steps plus a per-group serial-dispatch
+    term (``overhead`` lane-equivalents) that keeps the otherwise
+    degenerate width-1 optimum from shredding the corpus into
+    per-trace groups. Returns (cost, per-group widths in order).
+    """
+    n = len(padded)
+    cost = [0.0] * (n + 1)
+    choice = [0] * n
+    for i in range(n - 1, -1, -1):
+        best, best_w = None, widths[0]
+        for w in widths:
+            c = padded[i] * (w + overhead) + cost[min(n, i + w)]
+            if best is None or c < best:
+                best, best_w = c, w
+        cost[i], choice[i] = best, best_w
+    group_widths = []
+    i = 0
+    while i < n:
+        group_widths.append(choice[i])
+        i += choice[i]
+    return cost[0], tuple(group_widths)
 
 
 def plan_sweep(lengths, lane_width: Optional[int] = None,
                chunk: int = DEFAULT_CHUNK,
-               n_shards: Optional[int] = None) -> SweepPlan:
-    """Bucket traces by length into fixed-geometry lane groups.
+               n_shards: Optional[int] = None,
+               max_shapes: int = DEFAULT_MAX_SHAPES,
+               overhead_lanes: float = DEFAULT_PACK_OVERHEAD) -> SweepPlan:
+    """Pack traces into lane groups with a cost-model packer (§9).
+
+    Traces sort longest-first; groups are consecutive runs of that
+    order, so a group's time axis pads to its FIRST member's
+    chunk-padded length. The packer chooses per-group lane widths from
+    the candidate ladder (``lane_width`` — default
+    ``min(n, DEFAULT_LANE_WIDTH)`` — and its halvings, rounded up to
+    ``n_shards`` multiples) to minimize total padded lane-steps plus an
+    ``overhead_lanes`` serial-dispatch term per group, subject to the
+    compile budget: at most ``max_shapes`` DISTINCT widths, because
+    every distinct ``(chunk, width)`` slab is one more executable.
+    Plans are guaranteed never worse than the fixed-width reference
+    (single width ``lane_width``) in padded lane-steps — when the
+    cost-model pick loses on pure padded waste it falls back to the
+    reference (``fixed_lane_steps`` records the reference either way).
 
     ``n_shards=None`` reads the local device count; pass 1 to plan a
     single-device schedule. The effective chunk is capped at the longest
-    trace (padded up), so every group's scan runs the same
-    ``(chunk, lane_width)`` slab shape.
+    trace (padded up), so each group's scan reuses its width's
+    ``(chunk, width)`` slab shape.
     """
     lengths = np.asarray(lengths, np.int64)
     n = len(lengths)
     if n == 0:
         raise ValueError("plan_sweep needs at least one trace")
+    if max_shapes < 1:
+        raise ValueError("max_shapes must be >= 1")
     if n_shards is None:
         n_shards = max(1, jax.local_device_count())
-    lane_width = min(n, DEFAULT_LANE_WIDTH) if lane_width is None \
+    w_max = min(n, DEFAULT_LANE_WIDTH) if lane_width is None \
         else max(1, lane_width)
-    lane_width = -(-lane_width // n_shards) * n_shards
+    w_max = -(-w_max // n_shards) * n_shards
     eff_chunk = max(1, min(chunk, int(lengths.max())))
     order = np.argsort(-lengths, kind="stable")   # longest first
-    groups = []
-    for k in range(0, n, lane_width):
-        idx = order[k: k + lane_width]
-        tmax = max(1, int(lengths[idx].max()))
-        padded_t = -(-tmax // eff_chunk) * eff_chunk
-        groups.append(LaneGroup(tuple(int(i) for i in idx), padded_t))
-    return SweepPlan(tuple(groups), lane_width, eff_chunk, n_shards)
+    padded = [-(-max(1, int(lengths[i])) // eff_chunk) * eff_chunk
+              for i in order]
+
+    def steps_of(group_widths: Sequence[int]) -> int:
+        total, i = 0, 0
+        for w in group_widths:
+            total += padded[i] * w
+            i += w
+        return total
+
+    # fixed-width reference: the single-width plan at w_max
+    _, fixed_widths = _pack(padded, (w_max,), overhead_lanes)
+    fixed_steps = steps_of(fixed_widths)
+
+    # width subsets within the compile budget, simplest-first: every
+    # single width, then pairs, ... — ties keep the earlier (simpler,
+    # narrower-primary) plan, so the search is deterministic
+    from itertools import combinations
+    cands = _width_candidates(w_max, n_shards)
+    best_cost, best_widths = None, fixed_widths
+    for size in range(1, min(max_shapes, len(cands)) + 1):
+        for subset in combinations(cands, size):
+            cost, widths = _pack(padded, subset, overhead_lanes)
+            if best_cost is None or cost < best_cost:
+                best_cost, best_widths = cost, widths
+
+    # never-worse guard: the packer must not trade padded waste for
+    # dispatch savings relative to the documented fixed-width reference
+    if steps_of(best_widths) > fixed_steps:
+        best_widths = fixed_widths
+
+    groups, i = [], 0
+    for w in best_widths:
+        idx = order[i: i + w]
+        groups.append(LaneGroup(tuple(int(j) for j in idx),
+                                padded[i], int(w)))
+        i += w
+    return SweepPlan(tuple(groups),
+                     max(g.lane_width for g in groups),
+                     eff_chunk, n_shards,
+                     int(lengths.sum()), int(fixed_steps))
 
 
 def sweep_scheduled(cfg: SimConfig,
@@ -411,15 +564,16 @@ def sweep_scheduled(cfg: SimConfig,
 
     Accepts a dict/sequence of unequal-length traces, a
     :class:`PaddedSuite`, or a ``(B, T)`` block array with ``lengths``.
-    The corpus is scheduled with :func:`plan_sweep` (length-bucketed
-    fixed-width lane groups), each group runs through :func:`sweep` —
-    sharded over local devices when possible — and per-trace results are
-    reassembled in the ORIGINAL trace order. Statistics are bit-identical
-    to sweeping (or serially simulating) each trace alone; the whole
-    corpus costs one compile per config shape because every group shares
-    the ``(chunk, lane_width)`` slab geometry. Groups shorter than the
-    lane width are padded with empty (length-0) lanes, which are
-    bit-exact no-ops under the §6 masking contract.
+    The corpus is scheduled with :func:`plan_sweep` (the cost-model lane
+    packer, §9), each group runs through :func:`sweep` — sharded over
+    local devices when possible — and per-trace results are reassembled
+    in the ORIGINAL trace order. Statistics are bit-identical to
+    sweeping (or serially simulating) each trace alone; the whole corpus
+    costs at most ``max_shapes`` compiles per config because groups draw
+    their ``(chunk, width)`` slab geometry from the packer's bounded
+    width set. Groups holding fewer traces than their lane width are
+    padded with empty (length-0) lanes, which are bit-exact no-ops under
+    the §6 masking contract.
     """
     import time
 
@@ -440,8 +594,9 @@ def sweep_scheduled(cfg: SimConfig,
     n, t_max = blocks.shape
     lengths = (np.full((n,), t_max, np.int64) if lengths is None
                else np.asarray(lengths, np.int64))
-    if lengths.shape != (n,) or (lengths > t_max).any():
-        raise ValueError("lengths must be (B,) and <= trace axis")
+    if lengths.shape != (n,) or (lengths > t_max).any() \
+            or (lengths < 0).any():
+        raise ValueError("lengths must be (B,) within [0, trace axis]")
 
     if plan is None:
         plan = plan_sweep(lengths, lane_width, chunk,
@@ -451,8 +606,8 @@ def sweep_scheduled(cfg: SimConfig,
     hit = np.zeros((n, t_max), bool)
     compiles, unknown = 0, False
     for g in plan.groups:
-        gb = np.zeros((plan.lane_width, g.padded_t), np.int32)
-        gl = np.zeros((plan.lane_width,), np.int64)
+        gb = np.zeros((g.lane_width, g.padded_t), np.int32)
+        gl = np.zeros((g.lane_width,), np.int64)
         for j, idx in enumerate(g.indices):
             ln = int(lengths[idx])
             gb[j, :ln] = blocks[idx, :ln]

@@ -3,15 +3,16 @@
 from .synthetic import (association_groups, interleaved_sequential, looping,
                         mixed, padded_suite, representative_traces,
                         stack_padded, suite, zipf)
-from .corpus import (SCALES, WorkloadSpec, build_corpus, corpus_specs,
-                     corpus_suite)
+from .corpus import (FAMILIES, SCALES, WorkloadSpec, build_corpus,
+                     corpus_specs, corpus_suite, family_of)
 from .io import (ingest, ingest_msr_csv, ingest_raw, ingest_to_npz,
                  load_traces, save_traces, workload_stats)
 
 __all__ = [
     "association_groups", "interleaved_sequential", "looping", "mixed",
     "padded_suite", "representative_traces", "stack_padded", "suite", "zipf",
-    "SCALES", "WorkloadSpec", "build_corpus", "corpus_specs", "corpus_suite",
+    "FAMILIES", "SCALES", "WorkloadSpec", "build_corpus", "corpus_specs",
+    "corpus_suite", "family_of",
     "ingest", "ingest_msr_csv", "ingest_raw", "ingest_to_npz",
     "load_traces", "save_traces", "workload_stats",
 ]

@@ -153,6 +153,19 @@ def corpus_specs(n_requests: int = 50_000,
     return tuple(specs)
 
 
+def family_of(name: str) -> str:
+    """Workload family of a registry entry name (``seq012`` -> ``seq``).
+
+    Registry names are ``{family}{index:03d}``; the figure layer uses
+    this to aggregate per-family breakdowns without re-deriving specs.
+    """
+    fam = name.rstrip("0123456789")
+    if fam == name or fam not in FAMILIES:
+        raise ValueError(f"{name!r} is not a corpus registry name "
+                         f"(families: {FAMILIES})")
+    return fam
+
+
 def build_corpus(specs) -> Dict[str, np.ndarray]:
     """Generate every spec; dict preserves registry order."""
     return {sp.name: sp.generate() for sp in specs}

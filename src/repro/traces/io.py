@@ -62,19 +62,23 @@ def workload_stats(trace: np.ndarray) -> Dict[str, float]:
 
     Total functions of the trace: length-0 and length-1 traces get
     well-defined zeros (``sequential_fraction`` needs two requests;
-    ``np.mean`` over an empty ``np.diff`` would be NaN).
+    ``np.mean`` over an empty ``np.diff`` would be NaN) plus a
+    ``degenerate`` flag — downstream summary CSVs surface such traces
+    through that column instead of silently dropping the rows
+    (``benchmarks.corpus_figures``).
     """
     trace = np.asarray(trace).ravel()
     n = int(trace.size)
     if n == 0:
         return {"requests": 0, "unique_blocks": 0, "cold_miss_ratio": 0.0,
                 "sequential_fraction": 0.0, "mean_freq": 0.0,
-                "p99_freq": 0.0, "mid_freq_blocks": 0}
+                "p99_freq": 0.0, "mid_freq_blocks": 0, "degenerate": True}
     uniq, counts = np.unique(trace, return_counts=True)
     diffs = np.diff(trace.astype(np.int64))
     seq_frac = float(np.mean(diffs == 1)) if diffs.size else 0.0
     return {
         "requests": n,
+        "degenerate": n <= 1,
         "unique_blocks": int(len(uniq)),
         "cold_miss_ratio": len(uniq) / n,
         "sequential_fraction": seq_frac,

@@ -1,0 +1,101 @@
+"""Corpus-native figure engine: aggregation schemas + sweep memoization.
+
+ISSUE 5: every figure driver reads its sweeps from
+``benchmarks.corpus_figures`` — per-family aggregation must be
+hand-verifiably correct (a 2-family micro-corpus is checked against
+hand-computed means), degenerate traces must be surfaced rather than
+dropped, and the engine must memoize so the whole figure set costs one
+scheduled sweep per config.
+"""
+
+import numpy as np
+import pytest
+
+from repro.traces import FAMILIES, family_of
+
+from benchmarks import corpus_figures as cf
+
+
+class TestFamilyOf:
+    def test_registry_names(self):
+        assert family_of("seq012") == "seq"
+        assert family_of("midfreq007") == "midfreq"
+        assert family_of("mixed034") == "mixed"
+
+    def test_rejects_non_registry_names(self):
+        for bad in ("syn00", "seq", "bogus123"):
+            with pytest.raises(ValueError, match="registry"):
+                family_of(bad)
+
+
+class TestFamilyRows:
+    """Hand-computed 2-family micro-corpus (ISSUE 5 satellite)."""
+
+    FAMILIES_ARR = np.array(["seq", "midfreq", "seq"])
+
+    def test_hand_computed_means(self):
+        rows = cf.family_rows(self.FAMILIES_ARR,
+                              {"hr": np.array([0.2, 0.9, 0.4]),
+                               "prec": np.array([0.5, 0.7, 0.1])})
+        # registry family order: seq before midfreq; 'all' last
+        assert rows == [
+            ["seq", 2, pytest.approx(0.3), pytest.approx(0.3)],
+            ["midfreq", 1, pytest.approx(0.9), pytest.approx(0.7)],
+            ["all", 3, pytest.approx(0.5), pytest.approx(0.433333)],
+        ]
+
+    def test_families_follow_registry_order(self):
+        fams = np.array(["mixed", "seq", "zipf", "seq"])
+        rows = cf.family_rows(fams, {"v": np.arange(4.0)})
+        assert [r[0] for r in rows] == ["seq", "zipf", "mixed", "all"]
+        assert [r[0] for r in rows[:-1]] == \
+            [f for f in FAMILIES if f in fams]
+
+    def test_nan_entries_excluded_from_means(self):
+        rows = cf.family_rows(self.FAMILIES_ARR,
+                              {"p": np.array([np.nan, np.nan, 0.4])})
+        assert rows[0][2] == pytest.approx(0.4)   # seq: one finite value
+        assert rows[1][2] == ""                   # midfreq: all-NaN
+        assert rows[2][2] == pytest.approx(0.4)
+
+
+class TestImprovementSummary:
+    def test_hand_computed_with_degenerate_surfacing(self):
+        hrs = {"lru": np.array([0.5, 0.001, 0.2]),
+               "mithril-lru": np.array([0.75, 0.101, 0.2])}
+        degenerate = np.array([False, False, True])
+        rows = cf.improvement_summary(hrs, degenerate)
+        assert len(rows) == 1
+        algo, avg, mx, n_eligible, abs_delta, n_degen = rows[0]
+        assert algo == "mithril-lru"
+        # only trace 0 has an LRU baseline AND is non-degenerate
+        assert avg == "50.0%" and mx == "50.0%" and n_eligible == 1
+        # absolute delta averages over ALL traces: (0.25+0.1+0)/3
+        assert abs_delta == "11.7pp"
+        assert n_degen == 1   # surfaced, not silently dropped
+
+    def test_no_eligible_traces_reports_empty_not_crash(self):
+        hrs = {"lru": np.zeros(3), "pg-lru": np.full(3, 0.2)}
+        rows = cf.improvement_summary(hrs, np.zeros(3, bool))
+        assert rows[0][1] == "" and rows[0][3] == 0
+
+
+@pytest.mark.slow
+class TestEngineMemoization:
+    """One scheduled sweep per config, however many figures read it."""
+
+    def test_run_and_result_memoized(self):
+        cf.reset_engine()
+        try:
+            run = cf.corpus_run("quick", 300)
+            assert cf.corpus_run("quick", 300) is run
+            a = run.result("lru")
+            assert run.result("lru") is a       # same SweepResult object
+            # extra_result with an equal config collapses onto the memo
+            assert run.extra_result(run.config("lru"), "lru@512",
+                                    "t") is a
+            assert run.n_traces == 16
+            assert set(run.families) == set(FAMILIES)
+            assert len(a.hit_ratios()) == 16
+        finally:
+            cf.reset_engine()

@@ -47,8 +47,15 @@ class TestPlan:
         plan = plan_sweep(lengths, lane_width=2, chunk=256, n_shards=1)
         seen = [i for g in plan.groups for i in g.indices]
         assert sorted(seen) == list(range(5))
-        # longest-first bucketing: first group holds the longest traces
-        assert set(plan.groups[0].indices) == {0, 3}
+        # longest-first packing: the longest trace leads the first group
+        assert plan.groups[0].indices[0] == 0
+
+    def test_groups_are_consecutive_runs_of_sorted_order(self):
+        lengths = np.array([900, 100, 500, 700, 300])
+        plan = plan_sweep(lengths, lane_width=2, chunk=256, n_shards=1)
+        flat = [i for g in plan.groups for i in g.indices]
+        order = list(np.argsort(-lengths, kind="stable"))
+        assert flat == order
 
     def test_padded_t_is_chunk_multiple_and_covers_group(self):
         lengths = np.array([900, 100, 500, 700, 300])
@@ -56,12 +63,14 @@ class TestPlan:
         for g in plan.groups:
             assert g.padded_t % plan.chunk == 0
             assert g.padded_t >= lengths[list(g.indices)].max()
+            assert len(g.indices) <= g.lane_width
 
     def test_lane_width_rounds_to_shards(self):
         plan = plan_sweep(np.array([50] * 10), lane_width=3, chunk=64,
                           n_shards=4)
         assert plan.lane_width == 4
         assert plan.n_shards == 4
+        assert all(g.lane_width % 4 == 0 for g in plan.groups)
 
     def test_chunk_capped_at_longest_trace(self):
         plan = plan_sweep(np.array([70, 40]), chunk=4096, n_shards=1)
@@ -70,9 +79,88 @@ class TestPlan:
 
     def test_defaults(self):
         plan = plan_sweep(np.array([100] * 40), n_shards=1)
-        assert plan.lane_width == DEFAULT_LANE_WIDTH
+        assert plan.lane_width <= DEFAULT_LANE_WIDTH
         with pytest.raises(ValueError, match="at least one"):
             plan_sweep(np.array([], np.int64))
+
+
+class TestPacker:
+    """Cost-model packer invariants (ISSUE 5 / DESIGN.md §9)."""
+
+    LENGTH_SETS = [
+        np.array([1_000_000] + [1000] * 15),          # one giant outlier
+        np.array([100] * 40),                         # uniform
+        np.array([10, 20, 40, 80, 160, 320, 640, 1280, 2560, 5120]),
+        np.geomspace(50, 50_000, 33).astype(np.int64),
+        np.array([4097, 4096, 4095, 1, 1, 1, 1, 1]),  # chunk-boundary
+    ]
+
+    def test_never_worse_padded_waste_than_fixed_width(self):
+        rng = np.random.default_rng(7)
+        sets = self.LENGTH_SETS + [
+            rng.integers(1, 30_000, size=n) for n in (5, 17, 64, 135)]
+        for lengths in sets:
+            for chunk in (64, 4096):
+                plan = plan_sweep(lengths, chunk=chunk, n_shards=1)
+                assert plan.padded_lane_steps <= plan.fixed_lane_steps, \
+                    (lengths[:8], chunk)
+                assert plan.waste_ratio <= plan.fixed_waste_ratio + 1e-12
+
+    def test_compile_shape_budget_respected(self):
+        rng = np.random.default_rng(11)
+        lengths = rng.integers(1, 50_000, size=64)
+        for max_shapes in (1, 2, 3):
+            plan = plan_sweep(lengths, chunk=4096, n_shards=1,
+                              max_shapes=max_shapes)
+            assert 1 <= len(plan.shape_widths) <= max_shapes
+        with pytest.raises(ValueError, match="max_shapes"):
+            plan_sweep(lengths, max_shapes=0)
+
+    def test_skewed_corpus_strict_reduction(self):
+        """The motivating case: one huge trace must not drag a full
+        lane group through its padded tail."""
+        plan = plan_sweep(np.array([1_000_000] + [1000] * 15),
+                          chunk=4096, n_shards=1)
+        assert plan.waste_ratio < 0.25
+        assert plan.fixed_waste_ratio > 0.9
+        red = plan.packer_stats()["reduction_vs_fixed"]
+        assert red > 0.5, red
+
+    def test_packer_stats_are_self_consistent(self):
+        lengths = np.array([9000, 12000, 20000, 300, 8000, 17000, 40])
+        plan = plan_sweep(lengths, chunk=4096, n_shards=1)
+        st = plan.packer_stats()
+        assert st["padded_lane_steps"] == sum(
+            g.padded_t * g.lane_width for g in plan.groups)
+        assert st["ideal_lane_steps"] == int(lengths.sum())
+        assert st["n_groups"] == len(plan.groups)
+        assert st["n_traces"] == len(lengths)
+        assert st["widths"] == list(plan.shape_widths)
+        assert 0.0 <= st["waste_ratio"] <= 1.0
+        # packer_stats rounds ratios to 6 decimals
+        assert abs(st["waste_ratio"]
+                   - (1 - st["ideal_lane_steps"]
+                      / st["padded_lane_steps"])) < 1e-6
+
+    def test_variable_width_plans_stay_bit_identical(self, corpus):
+        """Packing is invisible in the results: a single-shape plan and
+        the default two-shape plan produce identical stats in the
+        original trace order."""
+        from repro.cache import pad_traces
+        suite = pad_traces(corpus)
+        one = sweep_scheduled(
+            CFG, suite, chunk=256,
+            plan=plan_sweep(suite.lengths, chunk=256, n_shards=1,
+                            max_shapes=1))
+        two = sweep_scheduled(
+            CFG, suite, chunk=256,
+            plan=plan_sweep(suite.lengths, chunk=256, n_shards=1,
+                            max_shapes=2))
+        for field, x, y in zip(one.stats._fields, one.stats, two.stats):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"stats.{field} depends on the packing")
+        np.testing.assert_array_equal(one.hit_curve, two.hit_curve)
 
 
 class TestScheduledSweep:
@@ -113,6 +201,17 @@ class TestScheduledSweep:
         np.testing.assert_array_equal(a.hit_curve, b.hit_curve)
         np.testing.assert_array_equal(np.asarray(a.stats.hits),
                                       np.asarray(b.stats.hits))
+
+    def test_rejects_negative_lengths(self, corpus):
+        """A negative length must raise, not silently become an
+        all-masked zero-stat lane (the surfaced-not-dropped contract)."""
+        blocks = np.zeros((3, 100), np.int32)
+        bad = np.array([50, -1, 100])
+        with pytest.raises(ValueError, match="lengths"):
+            sweep_scheduled(CFG, blocks, lengths=bad, chunk=64)
+        from repro.cache.sweep import sweep as sweep_fn
+        with pytest.raises(ValueError, match="lengths"):
+            sweep_fn(CFG, blocks, lengths=bad, chunk=64)
 
     def test_rejects_conflicting_lengths(self, corpus):
         """Suite-like inputs carry their own lengths; an explicit
