@@ -57,6 +57,7 @@ def pf_src_of(cfg: SimConfig) -> int:
 
 _TELEMETRY: List[dict] = []
 _PACKER: List[dict] = []
+_SERVING: List[dict] = []
 
 
 def record_sweep(job: str, config: str, cfg: SimConfig,
@@ -106,14 +107,35 @@ def record_packer(job: str, plan: SweepPlan, scale: str,
     entry = {"job": job, "scale": scale, "trace_len": trace_len,
              **plan.packer_stats()}
     _PACKER.append(entry)
-    print(f"  [{job}] packer: widths={entry['widths']} "
+    print(f"  [{job}] packer: shapes={entry['shapes']} "
           f"groups={entry['n_groups']} waste={entry['waste_ratio']:.4f} "
-          f"(fixed-width {entry['fixed_waste_ratio']:.4f}, "
+          f"(fixed-shape {entry['fixed_waste_ratio']:.4f}, "
           f"reduction {entry['reduction_vs_fixed']:.4f})")
 
 
 def packer_telemetry() -> List[dict]:
     return list(_PACKER)
+
+
+def record_serving(job: str, config: str, metrics: Dict) -> None:
+    """Log one measured serving run (``TieredServeEngine.metrics()``).
+
+    The entry keeps the engine's split: virtual-step counters are
+    deterministic and FAIL-gated by ``benchmarks.compare``; wall-clock
+    throughput/latency only WARN.
+    """
+    entry = {"job": job, "config": config, **metrics}
+    _SERVING.append(entry)
+    print(f"  [{job}] {config:<16} tok={entry['tokens']} "
+          f"occ={entry['mean_batch_occupancy']:.2f} "
+          f"turn_p95={entry['turnaround_steps_p95']:.1f} "
+          f"tier_hit={entry['tier']['hit_ratio']:.4f} "
+          f"tok/s={entry['throughput_tok_s']:.1f} "
+          f"step_p95={entry['step_latency_s_p95'] * 1e3:.2f}ms")
+
+
+def serving_telemetry() -> List[dict]:
+    return list(_SERVING)
 
 
 def write_bench_json(meta: dict, jobs: List[dict]) -> str:
@@ -122,7 +144,8 @@ def write_bench_json(meta: dict, jobs: List[dict]) -> str:
     with open(path, "w") as f:
         json.dump({"meta": meta, "jobs": jobs,
                    "sweeps": sweep_telemetry(),
-                   "packer": packer_telemetry()}, f, indent=2)
+                   "packer": packer_telemetry(),
+                   "serving": serving_telemetry()}, f, indent=2)
     print(f"wrote {path}")
     return path
 

@@ -24,7 +24,12 @@ Policy (make CI *compare* trajectories, not just archive them):
 * packer efficiency (ISSUE 5): the lane packer's padded-waste ratio is
   pure arithmetic over the corpus lengths, so with the same geometry
   and device count any waste-ratio regression vs the baseline is a
-  scheduling-semantics change and FAILS; improvements are noted.
+  scheduling-semantics change and FAILS; improvements are noted;
+* measured serving (ISSUE 6): the ``TieredServeEngine`` metrics split
+  two ways — virtual-step counters (tokens, turnaround percentiles,
+  batch occupancy, the whole tier counter dict) are deterministic
+  given the workload, so any drift FAILS; wall-clock throughput and
+  step-latency percentiles only WARN, like sweep wall-clock.
 
 Refresh a geometry's baseline by copying a trusted run of that suite:
 
@@ -127,6 +132,39 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
                 f"packer {p['job']}: padded-waste ratio improved "
                 f"{b['waste_ratio']:.6f} -> {p['waste_ratio']:.6f} "
                 "(baseline refresh will pin it)")
+
+    # measured serving: deterministic counters FAIL, wall-clock WARNs
+    det_keys = ("requests", "tokens", "steps", "mean_batch_occupancy",
+                "turnaround_steps_p50", "turnaround_steps_p95",
+                "turnaround_steps_p99", "tier")
+    base_sv = {(s["job"], s["config"]): s
+               for s in baseline.get("serving", [])}
+    for s in fresh.get("serving", []):
+        key = (s["job"], s["config"])
+        b = base_sv.get(key)
+        if b is None:
+            notes.append(f"serving {key}: not in baseline "
+                         "(new scenario, unchecked)")
+            continue
+        if not base_ix:     # geometry mismatch cleared the comparison
+            continue
+        for k in det_keys:
+            if s.get(k) != b.get(k):
+                failures.append(
+                    f"serving {key}: deterministic counter '{k}' drifted "
+                    f"{b.get(k)} -> {s.get(k)}")
+        if b.get("throughput_tok_s", 0) > 0 and (
+                s.get("throughput_tok_s", 0)
+                < b["throughput_tok_s"] * (1 - wallclock_warn)):
+            warnings.append(
+                f"serving {key}: throughput {b['throughput_tok_s']:.1f} -> "
+                f"{s['throughput_tok_s']:.1f} tok/s "
+                f"(-{100 * (1 - s['throughput_tok_s'] / b['throughput_tok_s']):.0f}%)")
+
+    for key in base_sv.keys() - {(s["job"], s["config"])
+                                 for s in fresh.get("serving", [])}:
+        if base_ix:
+            failures.append(f"serving {key}: missing from fresh run")
 
     failed_jobs = [j for j in fresh.get("jobs", [])
                    if j.get("status") != "ok"]

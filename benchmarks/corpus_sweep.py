@@ -32,7 +32,7 @@ def main(scale: str = "quick", trace_len: int | None = None) -> str:
     n_degenerate = int(run.degenerate.sum())
     print(f"  [{job}] {run.n_traces} traces (len {run.lengths.min()}..."
           f"{run.lengths.max()}), {len(run.plan.groups)} groups, "
-          f"widths={list(run.plan.shape_widths)}, chunk={run.plan.chunk}, "
+          f"shapes={['x'.join(map(str, s)) for s in run.plan.shapes]}, "
           f"shards={run.plan.n_shards}")
     if n_degenerate:
         print(f"  [{job}] {n_degenerate} degenerate trace(s) (len<=1) "

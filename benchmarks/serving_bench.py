@@ -1,0 +1,131 @@
+"""Measured serving benchmark: tiered batch-decode under arrivals.
+
+The serving half of the streaming ingestion engine (DESIGN.md §10):
+``launch.serve.TieredServeEngine`` drives continuous-batching flash
+decode over the MITHRIL-managed paged-KV tier while multi-tenant
+requests arrive through ``traces.arrival_process`` (on-off bursts,
+staggered tenants). Unlike ``fig8_latency`` — which *models* latency
+from hit ratios — this job MEASURES throughput (tok/s) and step-latency
+percentiles, and splits its telemetry the way ``benchmarks.compare``
+gates it: virtual-step counters (tokens, turnaround percentiles, tier
+hit ratio) are deterministic and FAIL on drift; wall-clock numbers
+(tok/s, p50/p95/p99 step seconds) only WARN.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --scale quick
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.cache.tiered import TieredKVCache
+from repro.core import MithrilConfig
+from repro.launch.serve import TieredServeEngine
+from repro.traces import arrival_process
+
+from .common import record_serving, write_csv
+
+# mine_rows must sit BELOW the distinct-page count of the workload: the
+# mining table only triggers when mine_rows distinct pages each reach
+# min_support misses, and a serving tier re-demands a small recurring
+# page population (tenant working sets), not an open-ended block stream
+MCFG = MithrilConfig(min_support=2, max_support=8, lookahead=40,
+                     rec_buckets=512, rec_ways=4, mine_rows=8,
+                     pf_buckets=512, pf_ways=4, prefetch_list=3)
+
+SCALES = {
+    # geometry per suite: tenants x requests each, page pool, HBM slots.
+    # Slots are sized BELOW the aggregate working set (tenants x pages)
+    # but above one batch's demand (max_batch x pages) — tenant revisits
+    # miss under LRU pressure, the regime where prefetching pays — and
+    # idle gaps space a tenant's requests so its pages actually evict
+    # between readmissions.
+    "quick": dict(n_tenants=5, reqs_per_tenant=10, pages_per_req=4,
+                  n_host_pages=256, n_hbm_slots=13, max_batch=3,
+                  idle_len=6, stagger=10),
+    "mid": dict(n_tenants=8, reqs_per_tenant=12, pages_per_req=4,
+                n_host_pages=512, n_hbm_slots=18, max_batch=4,
+                idle_len=8, stagger=16),
+    "full": dict(n_tenants=12, reqs_per_tenant=16, pages_per_req=4,
+                 n_host_pages=1024, n_hbm_slots=22, max_batch=5,
+                 idle_len=10, stagger=24),
+}
+PAGE = dict(page_size=8, n_kv=2, head_dim=32)
+
+
+def build_workload(geo: dict, seed: int = 0):
+    """(arrival, rid, pages, decode_steps) rows in admission order.
+
+    Each tenant re-decodes over its own page working set (the pages of
+    one long conversation) across a burst of requests — revisits are
+    what both tiers cache and what MITHRIL mines across tenants. The
+    arrival process is the satellite-1 generator: one on-off stream per
+    tenant, crc32-seeded, staggered so load ramps instead of spiking.
+    """
+    rng = np.random.default_rng(seed)
+    streams = {f"tenant{t:02d}": np.empty(geo["reqs_per_tenant"])
+               for t in range(geo["n_tenants"])}
+    arrivals = arrival_process(streams, mode="onoff", burst_len=1,
+                               idle_len=geo["idle_len"],
+                               stagger=geo["stagger"], seed=seed)
+    working_sets = [rng.choice(geo["n_host_pages"], geo["pages_per_req"],
+                               replace=False)
+                    for _ in range(geo["n_tenants"])]
+    rows = []
+    for t, name in enumerate(streams):
+        for j, at in enumerate(arrivals[name]):
+            rows.append((int(at), t * geo["reqs_per_tenant"] + j,
+                         working_sets[t], 2 + (t + j) % 4))
+    rows.sort(key=lambda r: (r[0], r[1]))
+    return rows
+
+
+def serve(geo: dict, mithril: bool, seed: int = 0) -> dict:
+    tier = TieredKVCache(n_host_pages=geo["n_host_pages"],
+                         n_hbm_slots=geo["n_hbm_slots"], **PAGE,
+                         mithril_cfg=MCFG if mithril else None, seed=seed)
+    eng = TieredServeEngine(tier, max_batch=geo["max_batch"],
+                            n_q_heads=4, seed=seed)
+    for arrival, rid, pages, steps in build_workload(geo, seed):
+        eng.submit(rid, pages, steps, arrival=arrival)
+    return eng.run()
+
+
+def main(scale: str = "quick") -> str:
+    geo = SCALES[scale]
+    job = f"serving_{scale}"
+    rows = []
+    out = {}
+    for config, mithril in (("lru_tier", False), ("mithril_tier", True)):
+        m = serve(geo, mithril)
+        record_serving(job, config, m)
+        out[config] = m
+        rows.append([config, m["requests"], m["tokens"], m["steps"],
+                     m["mean_batch_occupancy"], m["turnaround_steps_p50"],
+                     m["turnaround_steps_p95"], m["turnaround_steps_p99"],
+                     m["tier"]["hit_ratio"], m["tier"]["precision"],
+                     m["throughput_tok_s"], m["step_latency_s_p50"],
+                     m["step_latency_s_p95"], m["step_latency_s_p99"]])
+    write_csv(f"serving_{scale}.csv",
+              "config,requests,tokens,steps,mean_occupancy,"
+              "turnaround_p50,turnaround_p95,turnaround_p99,"
+              "tier_hit_ratio,tier_precision,tok_s,"
+              "step_s_p50,step_s_p95,step_s_p99", rows)
+    lru, smart = out["lru_tier"], out["mithril_tier"]
+    return (f"tok={smart['tokens']};"
+            f"hit_lru={lru['tier']['hit_ratio']};"
+            f"hit_mithril={smart['tier']['hit_ratio']};"
+            f"tok_s={smart['throughput_tok_s']}")
+
+
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
+    return ap
+
+
+if __name__ == "__main__":
+    a = _parser().parse_args()
+    print(main(a.scale))

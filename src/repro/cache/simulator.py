@@ -263,3 +263,70 @@ def max_hit_ratio(trace: np.ndarray) -> float:
     """1 - cold-miss ratio: the paper's 'maximum obtainable hit ratio'."""
     n_unique = len(np.unique(trace))
     return 1.0 - n_unique / max(1, len(trace))
+
+
+class SimSession:
+    """Incremental simulation: feed requests as they arrive (§10).
+
+    The scan-based drivers (``simulate``, the sweep engines) want the
+    whole trace up front; a serving integration has requests *arriving*.
+    A session holds the carry between calls and steps the compiled chunk
+    runner (``sweep._runner`` at lane width 1 — shared executable cache,
+    so sessions cost no extra compiles beyond the first per (config,
+    chunk)) whenever a full chunk of requests has accumulated; the
+    remainder is flushed masked at :meth:`finish`. Statistics and hit
+    curve are bit-identical to ``simulate`` on the concatenated feed
+    regardless of how the feed was sliced — the chunk boundary is
+    invisible under the §6 masking contract
+    (``tests/test_streaming.py`` pins this).
+    """
+
+    def __init__(self, cfg: SimConfig, chunk: int = 256, unroll: int = 1):
+        from .sweep import _runner   # deferred: sweep imports this module
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        init_batched, self._run, place = _runner(cfg, unroll, 1)
+        self._carry = place(init_batched(1))
+        self._chunk = int(chunk)
+        self._pending = np.empty((0,), np.int32)
+        self._hits: list = []
+        self._fed = 0
+        self._done = False
+
+    @property
+    def requests_fed(self) -> int:
+        return self._fed
+
+    def _run_chunk(self, blk: np.ndarray, valid: np.ndarray) -> None:
+        self._carry, hits = self._run(self._carry,
+                                      jnp.asarray(blk[:, None]),
+                                      jnp.asarray(valid[:, None]))
+        self._hits.append(hits)
+
+    def feed(self, blocks) -> None:
+        """Append arrived requests; full chunks run immediately."""
+        if self._done:
+            raise RuntimeError("session already finished")
+        blocks = np.atleast_1d(np.asarray(blocks, np.int32))
+        self._fed += len(blocks)
+        self._pending = np.concatenate([self._pending, blocks])
+        while len(self._pending) >= self._chunk:
+            blk = self._pending[: self._chunk]
+            self._pending = self._pending[self._chunk:]
+            self._run_chunk(blk, np.ones((self._chunk,), bool))
+
+    def finish(self) -> SimResult:
+        """Flush the padded remainder and return the SimResult."""
+        if self._done:
+            raise RuntimeError("session already finished")
+        self._done = True
+        if len(self._pending):
+            blk = np.zeros((self._chunk,), np.int32)
+            blk[: len(self._pending)] = self._pending
+            valid = np.arange(self._chunk) < len(self._pending)
+            self._run_chunk(blk, valid)
+        stats = Stats(*(np.asarray(leaf)[0]
+                        for leaf in self._carry["stats"]))
+        hits = (np.concatenate([np.asarray(h)[:, 0] for h in self._hits])
+                if self._hits else np.zeros((0,), bool))
+        return SimResult(stats, hits[: self._fed])

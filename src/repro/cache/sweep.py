@@ -46,8 +46,10 @@ Batching invariants (DESIGN.md §6–§7):
 
 from __future__ import annotations
 
+import collections
 import functools
-from typing import Dict, Mapping, NamedTuple, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, \
+    Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -201,7 +203,6 @@ def _runner(cfg: SimConfig, unroll: int, n_shards: int = 1):
     from repro.dist import sharding as dist_sharding
 
     mesh = jax.make_mesh((n_shards,), (LANE_AXIS,))
-    slab = P(None, LANE_AXIS)
 
     def place(carry):
         """Pre-shard the initial carry so the first chunk's input
@@ -226,9 +227,15 @@ def _runner(cfg: SimConfig, unroll: int, n_shards: int = 1):
     @jax.jit
     def run_chunk(carry, blocks, valid):
         cspec = dist_sharding.lane_specs(carry, mesh, axis=LANE_AXIS)
+        # (chunk, W) slabs are lane-LAST (ring_specs): the time axis
+        # stays whole on every device, the lane axis splits — the same
+        # layout the streaming ring buffer stages, so recycled lanes
+        # keep their shard across admissions
+        bspec, vspec = dist_sharding.ring_specs((blocks, valid), mesh,
+                                                axis=LANE_AXIS)
         return shard_map(scan_chunk, mesh=mesh,
-                         in_specs=(cspec, slab, slab),
-                         out_specs=(cspec, slab),
+                         in_specs=(cspec, bspec, vspec),
+                         out_specs=(cspec, bspec),
                          check_rep=False)(carry, blocks, valid)
 
     return init_batched, run_chunk, place
@@ -285,6 +292,15 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
           shard: Optional[bool] = None) -> SweepResult:
     """Run a (B, T) padded trace batch through one configuration.
 
+    This is the OFFLINE SPECIAL CASE of the streaming ingestion engine
+    (:func:`sweep_streaming`, DESIGN.md §10): every trace is submitted
+    at virtual step 0 on its own lane (``lane_width = B``), so the
+    scheduler admits the whole batch into the first slab, no lane ever
+    recycles, and the staged slabs are exactly the ``(chunk, B)``
+    transposes of the padded block matrix — the same compiled
+    executable, carry evolution and results as the pre-streaming
+    chunk loop, bit for bit.
+
     ``lengths`` gives each trace's valid prefix (default: full T).
     Requests past a trace's length are bit-exact no-ops excluded from
     all statistics (source-gated, DESIGN.md §6). Time is padded up to a
@@ -313,30 +329,12 @@ def sweep(cfg: SimConfig, blocks: np.ndarray,
             or (lengths < 0).any():
         raise ValueError("lengths must be (B,) within [0, trace axis]")
 
-    chunk = max(1, min(chunk, n_req))
-    n_chunks = -(-n_req // chunk)
-    padded_t = n_chunks * chunk
-    valid = (np.arange(padded_t)[None, :] < lengths[:, None])
-    if padded_t != n_req:
-        blocks = np.pad(blocks, ((0, 0), (0, padded_t - n_req)))
-
-    n_shards = _lane_shards(n_traces, shard)
-    init_batched, run_chunk, place = _runner(cfg, unroll, n_shards)
-    before = compile_count(cfg, unroll, n_shards)
-    carry = place(init_batched(n_traces))
-    hit_chunks = []
-    for k in range(n_chunks):
-        sl = slice(k * chunk, (k + 1) * chunk)
-        carry, hits = run_chunk(carry,
-                                jnp.asarray(blocks[:, sl].T),
-                                jnp.asarray(valid[:, sl].T))
-        hit_chunks.append(np.asarray(hits).T)    # (B, chunk)
-
-    stats = jax.device_get(carry["stats"])
-    hit_curve = np.concatenate(hit_chunks, axis=1)[:, :n_req]
-    after = compile_count(cfg, unroll, n_shards)
-    return SweepResult(stats=stats, hit_curve=hit_curve, lengths=lengths,
-                       compiles=(after - before if before >= 0 else -1),
+    stream = sweep_streaming(cfg, blocks, lengths=lengths,
+                             lane_width=n_traces, chunk=chunk,
+                             unroll=unroll, shard=shard)
+    res = stream.result
+    return SweepResult(stats=res.stats, hit_curve=res.hit_curve,
+                       lengths=lengths, compiles=res.compiles,
                        seconds=time.time() - t0)
 
 
@@ -358,26 +356,31 @@ class LaneGroup(NamedTuple):
     indices: Tuple[int, ...]    # original trace positions in this group
     padded_t: int               # group time axis (a chunk multiple)
     lane_width: int             # lanes this group pads to
+    chunk: int                  # time-axis chunk of this group's slabs
 
 
 class SweepPlan(NamedTuple):
     """Device-and-shape schedule for a heterogeneous trace corpus.
 
     Groups are consecutive runs of the length-sorted corpus (longest
-    first), each padded to its own ``lane_width`` (from at most
-    ``max_shapes`` distinct widths — one compiled ``(chunk, width)``
-    slab per width) and a chunk-multiple time axis. Widths are chosen by
-    the cost-model packer of :func:`plan_sweep` (DESIGN.md §9) and are
-    always multiples of ``n_shards`` so the lane axis divides the device
-    mesh. ``lane_width`` is the widest group's width (the primary slab).
+    first), each running through a ``(chunk, width)`` slab shape drawn
+    from at most ``max_shapes`` distinct shapes — one compiled
+    executable per shape. Both axes are free per group: a short-trace
+    group may take a *narrower lane width* AND a *finer time chunk*
+    than the primary shape (the second-chunk freedom of DESIGN.md §9),
+    so chunk granularity no longer floors the padded tail on short
+    corpora. Widths are always multiples of ``n_shards`` so the lane
+    axis divides the device mesh; chunks are halvings of the base
+    chunk. ``lane_width``/``chunk`` are the widest group's shape (the
+    primary slab).
     """
 
     groups: Tuple[LaneGroup, ...]
     lane_width: int             # max group width (primary compiled shape)
-    chunk: int
+    chunk: int                  # base (primary) time chunk
     n_shards: int
     total_requests: int         # sum of valid per-trace lengths
-    fixed_lane_steps: int       # padded_lane_steps of the fixed-width plan
+    fixed_lane_steps: int       # padded_lane_steps of the fixed-shape plan
 
     @property
     def padded_lane_steps(self) -> int:
@@ -386,8 +389,13 @@ class SweepPlan(NamedTuple):
 
     @property
     def shape_widths(self) -> Tuple[int, ...]:
-        """Distinct lane widths = distinct compiled slab shapes."""
+        """Distinct lane widths across the compiled slab shapes."""
         return tuple(sorted({g.lane_width for g in self.groups}))
+
+    @property
+    def shapes(self) -> Tuple[Tuple[int, int], ...]:
+        """Distinct compiled ``(chunk, width)`` slab shapes."""
+        return tuple(sorted({(g.chunk, g.lane_width) for g in self.groups}))
 
     @property
     def waste_ratio(self) -> float:
@@ -397,7 +405,7 @@ class SweepPlan(NamedTuple):
 
     @property
     def fixed_waste_ratio(self) -> float:
-        """Waste ratio of the fixed-width reference plan (same inputs)."""
+        """Waste ratio of the fixed-shape reference plan (same inputs)."""
         if not self.fixed_lane_steps:
             return 0.0
         return 1.0 - self.total_requests / self.fixed_lane_steps
@@ -408,7 +416,8 @@ class SweepPlan(NamedTuple):
             "n_traces": sum(len(g.indices) for g in self.groups),
             "n_groups": len(self.groups),
             "widths": list(self.shape_widths),
-            "n_shapes": len(self.shape_widths),
+            "shapes": [f"{c}x{w}" for c, w in self.shapes],
+            "n_shapes": len(self.shapes),
             "chunk": self.chunk,
             "n_shards": self.n_shards,
             "padded_lane_steps": int(self.padded_lane_steps),
@@ -436,37 +445,62 @@ def _width_candidates(w_max: int, n_shards: int) -> Tuple[int, ...]:
     return tuple(sorted(cands))
 
 
-def _pack(padded: Sequence[int], widths: Sequence[int],
-          overhead: float) -> Tuple[float, Tuple[int, ...]]:
+# Chunk-ladder depth: the base chunk plus up to this many halvings are
+# shape candidates. Three halvings reach chunk/8 — finer granularity
+# stops mattering once the per-trace remainder is < 1/8 of a chunk,
+# while the candidate-shape count (widths x chunks) stays small enough
+# to enumerate shape subsets exhaustively.
+_CHUNK_LADDER = 3
+
+
+def _chunk_candidates(base: int) -> Tuple[int, ...]:
+    """Time-axis chunk ladder: the base chunk and its halvings
+    (``_CHUNK_LADDER`` deep, floored at 1), deduplicated, ascending."""
+    cands = set()
+    c = base
+    for _ in range(_CHUNK_LADDER + 1):
+        cands.add(max(1, c))
+        c //= 2
+    return tuple(sorted(cands))
+
+
+def _padded_len(length: int, chunk: int) -> int:
+    return -(-max(1, int(length)) // chunk) * chunk
+
+
+def _pack(lengths: Sequence[int], shapes: Sequence[Tuple[int, int]],
+          overhead: float) -> Tuple[float, Tuple[Tuple[int, int], ...]]:
     """Optimal consecutive partition of the length-sorted corpus.
 
-    ``padded[i]`` is trace ``i``'s chunk-padded length, sorted
-    descending, so a group covering positions ``[i, i+w)`` pads its time
-    axis to ``padded[i]``. Minimizes
+    ``lengths[i]`` is trace ``i``'s raw length, sorted descending, so a
+    group covering positions ``[i, i+w)`` pads its time axis to position
+    ``i``'s length rounded up to the group's chunk. ``shapes`` are the
+    candidate ``(width, chunk)`` slab shapes. Minimizes
 
         sum_g padded_t_g * (w_g + overhead)
 
     — the schedule's padded lane-steps plus a per-group serial-dispatch
     term (``overhead`` lane-equivalents) that keeps the otherwise
     degenerate width-1 optimum from shredding the corpus into
-    per-trace groups. Returns (cost, per-group widths in order).
+    per-trace groups. Returns (cost, per-group (width, chunk) in order).
     """
-    n = len(padded)
+    n = len(lengths)
     cost = [0.0] * (n + 1)
-    choice = [0] * n
+    choice: list = [None] * n
     for i in range(n - 1, -1, -1):
-        best, best_w = None, widths[0]
-        for w in widths:
-            c = padded[i] * (w + overhead) + cost[min(n, i + w)]
+        best, best_s = None, shapes[0]
+        for w, ck in shapes:
+            c = _padded_len(lengths[i], ck) * (w + overhead) \
+                + cost[min(n, i + w)]
             if best is None or c < best:
-                best, best_w = c, w
-        cost[i], choice[i] = best, best_w
-    group_widths = []
+                best, best_s = c, (w, ck)
+        cost[i], choice[i] = best, best_s
+    group_shapes = []
     i = 0
     while i < n:
-        group_widths.append(choice[i])
-        i += choice[i]
-    return cost[0], tuple(group_widths)
+        group_shapes.append(choice[i])
+        i += choice[i][0]
+    return cost[0], tuple(group_shapes)
 
 
 def plan_sweep(lengths, lane_width: Optional[int] = None,
@@ -477,23 +511,27 @@ def plan_sweep(lengths, lane_width: Optional[int] = None,
     """Pack traces into lane groups with a cost-model packer (§9).
 
     Traces sort longest-first; groups are consecutive runs of that
-    order, so a group's time axis pads to its FIRST member's
-    chunk-padded length. The packer chooses per-group lane widths from
-    the candidate ladder (``lane_width`` — default
-    ``min(n, DEFAULT_LANE_WIDTH)`` — and its halvings, rounded up to
-    ``n_shards`` multiples) to minimize total padded lane-steps plus an
-    ``overhead_lanes`` serial-dispatch term per group, subject to the
-    compile budget: at most ``max_shapes`` DISTINCT widths, because
-    every distinct ``(chunk, width)`` slab is one more executable.
-    Plans are guaranteed never worse than the fixed-width reference
-    (single width ``lane_width``) in padded lane-steps — when the
+    order, so a group's time axis pads to its FIRST member's length
+    rounded up to the *group's* chunk. The packer chooses per-group
+    ``(width, chunk)`` slab shapes from the candidate ladders — widths
+    are ``lane_width`` (default ``min(n, DEFAULT_LANE_WIDTH)``) and its
+    halvings rounded up to ``n_shards`` multiples; chunks are the base
+    chunk and its halvings — to minimize total padded lane-steps plus
+    an ``overhead_lanes`` serial-dispatch term per group, subject to
+    the compile budget: at most ``max_shapes`` DISTINCT ``(chunk,
+    width)`` shapes, because every distinct slab shape is one more
+    executable. A short-trace group may therefore take a finer time
+    chunk than the primary shape (not just a narrower width), which
+    recovers the chunk-floor waste on short corpora. Plans are
+    guaranteed never worse than the fixed-shape reference (single
+    shape ``(lane_width, chunk)``) in padded lane-steps — when the
     cost-model pick loses on pure padded waste it falls back to the
     reference (``fixed_lane_steps`` records the reference either way).
 
     ``n_shards=None`` reads the local device count; pass 1 to plan a
-    single-device schedule. The effective chunk is capped at the longest
-    trace (padded up), so each group's scan reuses its width's
-    ``(chunk, width)`` slab shape.
+    single-device schedule. The effective base chunk is capped at the
+    longest trace (padded up), so each group's scan reuses its shape's
+    ``(chunk, width)`` slab.
     """
     lengths = np.asarray(lengths, np.int64)
     n = len(lengths)
@@ -508,42 +546,46 @@ def plan_sweep(lengths, lane_width: Optional[int] = None,
     w_max = -(-w_max // n_shards) * n_shards
     eff_chunk = max(1, min(chunk, int(lengths.max())))
     order = np.argsort(-lengths, kind="stable")   # longest first
-    padded = [-(-max(1, int(lengths[i])) // eff_chunk) * eff_chunk
-              for i in order]
+    sorted_lens = [int(lengths[i]) for i in order]
 
-    def steps_of(group_widths: Sequence[int]) -> int:
+    def steps_of(group_shapes: Sequence[Tuple[int, int]]) -> int:
         total, i = 0, 0
-        for w in group_widths:
-            total += padded[i] * w
+        for w, ck in group_shapes:
+            total += _padded_len(sorted_lens[i], ck) * w
             i += w
         return total
 
-    # fixed-width reference: the single-width plan at w_max
-    _, fixed_widths = _pack(padded, (w_max,), overhead_lanes)
-    fixed_steps = steps_of(fixed_widths)
+    # fixed-shape reference: the single-shape plan at (w_max, eff_chunk)
+    _, fixed_shapes = _pack(sorted_lens, ((w_max, eff_chunk),),
+                            overhead_lanes)
+    fixed_steps = steps_of(fixed_shapes)
 
-    # width subsets within the compile budget, simplest-first: every
-    # single width, then pairs, ... — ties keep the earlier (simpler,
-    # narrower-primary) plan, so the search is deterministic
+    # shape subsets within the compile budget, simplest-first: every
+    # single shape, then pairs, ... — ties keep the earlier (simpler)
+    # plan, so the search is deterministic. Candidate shapes are the
+    # width ladder x chunk ladder, ordered coarse-to-fine.
     from itertools import combinations
-    cands = _width_candidates(w_max, n_shards)
-    best_cost, best_widths = None, fixed_widths
+    cands = [(w, ck)
+             for w in reversed(_width_candidates(w_max, n_shards))
+             for ck in reversed(_chunk_candidates(eff_chunk))]
+    best_cost, best_shapes = None, fixed_shapes
     for size in range(1, min(max_shapes, len(cands)) + 1):
         for subset in combinations(cands, size):
-            cost, widths = _pack(padded, subset, overhead_lanes)
+            cost, shapes = _pack(sorted_lens, subset, overhead_lanes)
             if best_cost is None or cost < best_cost:
-                best_cost, best_widths = cost, widths
+                best_cost, best_shapes = cost, shapes
 
     # never-worse guard: the packer must not trade padded waste for
-    # dispatch savings relative to the documented fixed-width reference
-    if steps_of(best_widths) > fixed_steps:
-        best_widths = fixed_widths
+    # dispatch savings relative to the documented fixed-shape reference
+    if steps_of(best_shapes) > fixed_steps:
+        best_shapes = fixed_shapes
 
     groups, i = [], 0
-    for w in best_widths:
+    for w, ck in best_shapes:
         idx = order[i: i + w]
         groups.append(LaneGroup(tuple(int(j) for j in idx),
-                                padded[i], int(w)))
+                                _padded_len(sorted_lens[i], ck),
+                                int(w), int(ck)))
         i += w
     return SweepPlan(tuple(groups),
                      max(g.lane_width for g in groups),
@@ -571,7 +613,7 @@ def sweep_scheduled(cfg: SimConfig,
     sweeping (or serially simulating) each trace alone; the whole corpus
     costs at most ``max_shapes`` compiles per config because groups draw
     their ``(chunk, width)`` slab geometry from the packer's bounded
-    width set. Groups holding fewer traces than their lane width are
+    shape set. Groups holding fewer traces than their lane width are
     padded with empty (length-0) lanes, which are bit-exact no-ops under
     the §6 masking contract.
     """
@@ -612,7 +654,7 @@ def sweep_scheduled(cfg: SimConfig,
             ln = int(lengths[idx])
             gb[j, :ln] = blocks[idx, :ln]
             gl[j] = ln
-        res = sweep(cfg, gb, gl, chunk=plan.chunk, unroll=unroll,
+        res = sweep(cfg, gb, gl, chunk=g.chunk, unroll=unroll,
                     shard=shard)
         unknown |= res.compiles < 0
         compiles += max(res.compiles, 0)
@@ -651,3 +693,349 @@ def sweep_grid(cfgs: Dict[str, SimConfig], blocks: np.ndarray,
                               unroll=unroll)
         out[name] = memo[cfg]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Streaming ingestion engine: ring-buffered slabs, lane recycling (§10)
+# ---------------------------------------------------------------------------
+
+DEFAULT_RING_DEPTH = 4      # slabs the producer stages ahead of the device
+
+
+class _Tenant:
+    """Host-side bookkeeping for one submitted trace.
+
+    ``avail`` (optional, same length as the trace) gives each request's
+    arrival step on the engine's virtual clock, nondecreasing; ``None``
+    means the whole trace is available at step 0 (the offline case).
+    ``cursor`` is the next unplaced request — the ONLY progress state,
+    and it is host-known, which is what lets the scheduler run ahead of
+    the device (see :class:`RingBuffer`).
+    """
+
+    __slots__ = ("index", "blocks", "avail", "length", "cursor")
+
+    def __init__(self, index: int, blocks: np.ndarray,
+                 avail: Optional[np.ndarray], length: int):
+        self.index = index
+        self.blocks = blocks
+        self.avail = avail
+        self.length = length
+        self.cursor = 0
+
+
+class _Slab(NamedTuple):
+    """One staged ``(chunk, W)`` request slab plus its host-side routing.
+
+    ``placements`` maps device outputs back to traces: for each lane
+    that placed requests, ``(lane, tenant, cursor0, positions)`` says
+    request ``cursor0 + k`` of ``tenant`` sits at slab row
+    ``positions[k]``. ``harvest`` lists ``(tenant, lane)`` pairs that
+    drain once this slab runs — the consumer snapshots those lanes'
+    statistics from the post-slab carry (device arrays are immutable,
+    so the snapshot is a free reference, not a copy).
+    """
+
+    blocks: jax.Array                       # (chunk, W) int32, staged
+    valid: jax.Array                        # (chunk, W) bool, staged
+    reset: Optional[np.ndarray]             # (W,) bool; None = no admission
+    placements: Tuple[Tuple[int, int, int, np.ndarray], ...]
+    harvest: Tuple[Tuple[int, int], ...]
+
+
+class RingBuffer:
+    """Bounded FIFO ring of staged request slabs.
+
+    The producer (the host scheduler) stages up to ``depth`` slabs ahead
+    of the consumer (the device chunk scan): ``jnp.asarray`` uploads
+    enqueue asynchronously, so slabs k+1..k+depth transfer while slab k
+    computes. Admission and placement depend only on host-known cursors
+    — never on device results — which is what makes the produce-ahead
+    legal; the depth bounds in-flight device memory at
+    ``depth * chunk * W`` request slots.
+    """
+
+    def __init__(self, depth: int = DEFAULT_RING_DEPTH):
+        if depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._q: collections.deque = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.depth
+
+    @property
+    def empty(self) -> bool:
+        return not self._q
+
+    def push(self, slab: _Slab) -> None:
+        if self.full:
+            raise RuntimeError("ring buffer full — pop before pushing")
+        self._q.append(slab)
+
+    def pop(self) -> _Slab:
+        return self._q.popleft()
+
+
+@jax.jit
+def _masked_reset(carry, template, mask):
+    """Lane recycling: where ``mask`` is set, the lane's carry becomes
+    the init template bit for bit; every other lane keeps its state
+    untouched. A recycled lane is therefore indistinguishable from a
+    fresh lane in a fresh batch — the §6 lane-independence argument
+    reduces streaming bit-identity to this one equality."""
+    def leaf(c, t):
+        m = mask.reshape((mask.shape[0],) + (1,) * (c.ndim - 1))
+        return jnp.where(m, t, c)
+
+    return jax.tree.map(leaf, carry, template)
+
+
+class StreamResult(NamedTuple):
+    """Streaming-engine result plus schedule telemetry.
+
+    ``result`` carries per-trace statistics in SUBMISSION order — the
+    same :class:`SweepResult` type the offline engines return, and per
+    trace bit-identical to them (lane assignment, slab chunking and
+    arrival gaps are all invisible under the §6 masking contract).
+    ``lane_steps`` is the executed (lane x request) slot count — the
+    recycling analogue of ``SweepPlan.padded_lane_steps``.
+    """
+
+    result: SweepResult
+    lane_width: int
+    chunk: int
+    n_slabs: int
+
+    @property
+    def lane_steps(self) -> int:
+        return self.n_slabs * self.chunk * self.lane_width
+
+    def streaming_stats(self) -> Dict[str, object]:
+        """Schedule-efficiency summary recorded in BENCH json."""
+        total = int(np.asarray(self.result.lengths).sum())
+        steps = self.lane_steps
+        return {
+            "lane_width": self.lane_width,
+            "chunk": self.chunk,
+            "n_slabs": self.n_slabs,
+            "lane_steps": int(steps),
+            "ideal_lane_steps": total,
+            "waste_ratio": round(1.0 - total / steps, 6) if steps else 0.0,
+        }
+
+
+def sweep_streaming(cfg: SimConfig,
+                    traces: Union[Mapping[str, np.ndarray],
+                                  Sequence[np.ndarray], PaddedSuite,
+                                  np.ndarray],
+                    lengths: Optional[np.ndarray] = None,
+                    arrivals: Optional[Sequence[np.ndarray]] = None,
+                    lane_width: Optional[int] = None,
+                    chunk: int = DEFAULT_CHUNK, unroll: int = 1,
+                    shard: Optional[bool] = None,
+                    ring_depth: int = DEFAULT_RING_DEPTH) -> StreamResult:
+    """Online ingestion: arrival is the primitive, traces stream through
+    a recycled lane pool (DESIGN.md §10).
+
+    The engine keeps ``lane_width`` device lanes and a virtual step
+    clock that advances one ``chunk`` per slab. A host scheduler admits
+    queued traces (FIFO) into idle lanes at slab boundaries, places each
+    admitted trace's arrived requests into its lane's slab column
+    (arrival gaps become ``valid=False`` no-op rows), and RECYCLES a
+    lane the moment its trace drains — the next queued trace is admitted
+    mid-run after a masked init reset (:func:`_masked_reset`) instead of
+    the engine scanning padded tails. Slabs stage through a
+    :class:`RingBuffer` ``ring_depth`` ahead of the device.
+
+    ``arrivals`` gives per-trace nondecreasing request arrival steps
+    (``None`` = everything at step 0); when every trace arrives at 0 and
+    ``lane_width`` covers the batch this degrades exactly to
+    :func:`sweep` — which is, in fact, implemented on top of this
+    engine. Statistics and hit curves are bit-identical to the offline
+    engines per trace: lanes are independent and invalid slots are
+    bit-exact no-ops (§6), and the batch-level mining barrier masks
+    per-lane ``need`` (§7), so neither lane assignment, chunk phase,
+    arrival gaps nor pool composition can leak between traces
+    (``tests/test_streaming.py`` pins this).
+    """
+    import time
+
+    t0 = time.time()
+    if not isinstance(traces, np.ndarray):
+        if lengths is not None:
+            raise ValueError("pass lengths only with a (B, T) block array"
+                             " — suites already carry per-trace lengths")
+        if not isinstance(traces, PaddedSuite):
+            traces = pad_traces(traces)
+        blocks, lengths = traces.blocks, traces.lengths
+    else:
+        blocks = np.asarray(traces, np.int32)
+    if blocks.ndim != 2:
+        raise ValueError(f"traces must stack to (B, T), got {blocks.shape}")
+    n, t_max = blocks.shape
+    lengths = (np.full((n,), t_max, np.int64) if lengths is None
+               else np.asarray(lengths, np.int64))
+    if lengths.shape != (n,) or (lengths > t_max).any() \
+            or (lengths < 0).any():
+        raise ValueError("lengths must be (B,) within [0, trace axis]")
+
+    avails: List[Optional[np.ndarray]] = [None] * n
+    if arrivals is not None:
+        if len(arrivals) != n:
+            raise ValueError(f"arrivals must give one array per trace "
+                             f"({n}), got {len(arrivals)}")
+        for i, a in enumerate(arrivals):
+            if a is None:
+                continue
+            a = np.asarray(a, np.int64)
+            if a.shape != (int(lengths[i]),):
+                raise ValueError(f"arrivals[{i}] must have shape "
+                                 f"({int(lengths[i])},), got {a.shape}")
+            if a.size and ((np.diff(a) < 0).any() or a[0] < 0):
+                raise ValueError(f"arrivals[{i}] must be nondecreasing "
+                                 "and nonnegative")
+            avails[i] = a
+
+    w = min(n, DEFAULT_LANE_WIDTH) if lane_width is None \
+        else max(1, int(lane_width))
+    n_shards = _lane_shards(w, shard)
+    chunk = max(1, min(int(chunk), max(1, t_max)))
+    tenants = [_Tenant(i, blocks[i], avails[i], int(lengths[i]))
+               for i in range(n)]
+
+    init_batched, run_chunk, place = _runner(cfg, unroll, n_shards)
+    before = compile_count(cfg, unroll, n_shards)
+    template = place(init_batched(w))
+    carry = template
+    if n_shards > 1:
+        from repro.dist import sharding as dist_sharding
+        mesh = jax.make_mesh((n_shards,), (LANE_AXIS,))
+
+        def place_mask(m):
+            spec = dist_sharding.occupancy_specs(m, mesh, axis=LANE_AXIS)
+            return jax.device_put(m, dist_sharding.to_named(spec, mesh))
+    else:
+        place_mask = jnp.asarray
+
+    queue: collections.deque = collections.deque(range(n))
+    lanes: List[Optional[int]] = [None] * w
+    clock = 0
+    # tenant -> (stats pytree reference, lane) snapshotted at drain time
+    stash: List[Optional[Tuple[Stats, int]]] = [None] * n
+
+    def produce() -> Optional[_Slab]:
+        nonlocal clock
+        while True:
+            t_start = clock
+            reset = np.zeros((w,), bool)
+            for lane in range(w):
+                if lanes[lane] is not None:
+                    continue
+                # zero-length submissions drain at admission: init stats,
+                # no lane occupied (bit-identical to an all-masked lane)
+                while queue and tenants[queue[0]].length == 0:
+                    stash[queue.popleft()] = (template["stats"], 0)
+                if not queue:
+                    break
+                head = tenants[queue[0]]
+                first = 0 if head.avail is None \
+                    else int(head.avail[head.cursor])
+                if first < t_start + chunk:
+                    queue.popleft()
+                    lanes[lane] = head.index
+                    reset[lane] = True
+                else:
+                    break       # FIFO: a not-yet-arrived head blocks
+            if any(la is not None for la in lanes):
+                break
+            if not queue:
+                return None     # fully drained
+            # every lane idle, nothing arrived yet: fast-forward the
+            # clock to the slab containing the head's first arrival
+            head = tenants[queue[0]]
+            clock = (int(head.avail[head.cursor]) // chunk) * chunk
+        slab_blocks = np.zeros((chunk, w), np.int32)
+        slab_valid = np.zeros((chunk, w), bool)
+        placements, harvest = [], []
+        for lane, ti in enumerate(lanes):
+            if ti is None:
+                continue
+            t = tenants[ti]
+            cap = min(t.length - t.cursor, chunk)
+            if t.avail is None:
+                pos = np.arange(cap)
+            else:
+                # request k lands at slab row k + the running max of its
+                # arrival slack: in-order placement, one row per request,
+                # never before arrival — gaps stay valid=False no-ops
+                slack = (t.avail[t.cursor: t.cursor + cap] - t_start
+                         - np.arange(cap))
+                pos = np.arange(cap) + np.maximum(
+                    np.maximum.accumulate(slack, axis=0)
+                    if cap else slack, 0)
+            pos = pos[pos < chunk]
+            k = len(pos)
+            if k:
+                slab_blocks[pos, lane] = t.blocks[t.cursor: t.cursor + k]
+                slab_valid[pos, lane] = True
+                placements.append((lane, ti, t.cursor, pos))
+                t.cursor += k
+            if t.cursor == t.length:
+                harvest.append((ti, lane))
+                lanes[lane] = None      # recycled at the next admission
+        clock = t_start + chunk
+        return _Slab(jnp.asarray(slab_blocks), jnp.asarray(slab_valid),
+                     reset if reset.any() else None,
+                     tuple(placements), tuple(harvest))
+
+    hit_records: List[Tuple[jax.Array, Tuple]] = []
+    ring = RingBuffer(ring_depth)
+    n_slabs, producing, first_slab = 0, True, True
+    while True:
+        while producing and not ring.full:
+            slab = produce()
+            if slab is None:
+                producing = False
+                break
+            ring.push(slab)
+        if ring.empty:
+            break
+        slab = ring.pop()
+        # slab 0 skips the reset outright: the carry IS the template
+        if slab.reset is not None and not first_slab:
+            carry = _masked_reset(carry, template,
+                                  place_mask(slab.reset))
+        first_slab = False
+        carry, hits = run_chunk(carry, slab.blocks, slab.valid)
+        hit_records.append((hits, slab.placements))
+        for ti, lane in slab.harvest:
+            stash[ti] = (carry["stats"], lane)
+        n_slabs += 1
+
+    # materialize: everything device-side resolved once, at the end
+    hit_curve = np.zeros((n, t_max), bool)
+    for hits, placements in hit_records:
+        h = np.asarray(hits)                    # (chunk, W)
+        for lane, ti, c0, pos in placements:
+            hit_curve[ti, c0: c0 + len(pos)] = h[pos, lane]
+    mat: Dict[int, list] = {}
+    rows = []
+    for ti in range(n):
+        st, lane = stash[ti]
+        if id(st) not in mat:
+            mat[id(st)] = [np.asarray(leaf) for leaf in st]
+        rows.append([leaf[lane] for leaf in mat[id(st)]])
+    stats = Stats(*(np.stack([r[j] for r in rows])
+                    for j in range(len(Stats._fields))))
+
+    after = compile_count(cfg, unroll, n_shards)
+    result = SweepResult(stats=stats, hit_curve=hit_curve, lengths=lengths,
+                         compiles=(after - before if before >= 0 else -1),
+                         seconds=time.time() - t0)
+    return StreamResult(result=result, lane_width=w, chunk=chunk,
+                        n_slabs=n_slabs)

@@ -50,6 +50,15 @@ class TieredStats:
     def precision(self) -> float:
         return self.prefetch_used / max(1, self.prefetch_issued)
 
+    def as_dict(self) -> Dict[str, object]:
+        """Counters + derived ratios, BENCH-json ready. Every entry is
+        deterministic given the access stream (no wall-clock), so the
+        serving benchmark gates regressions on them as FAIL."""
+        out = dict(dataclasses.asdict(self))
+        out["hit_ratio"] = round(self.hit_ratio, 6)
+        out["precision"] = round(self.precision, 6)
+        return out
+
 
 class TieredKVCache:
     """Page-granular two-tier KV store with optional MITHRIL prefetch."""
@@ -166,3 +175,60 @@ class TieredKVCache:
                                 jnp.asarray(self.hbm_v),
                                 ptab, lengths)
         return out[0]
+
+    def attend_batch(self, q: jax.Array, page_lists: List[np.ndarray],
+                     lengths: np.ndarray) -> jax.Array:
+        """One continuous-batch decode step: flash-decode every scheduled
+        request over its pages in a single kernel launch.
+
+        q: (B, Hq, hd); ``page_lists[i]`` are request i's page ids
+        (ragged — tables are zero-padded to the widest request, with
+        ``lengths`` masking the tail inside the kernel). Residency is
+        demanded request by request IN ORDER (each a recordable MITHRIL
+        access event — the interleaving across co-scheduled requests is
+        exactly what mining feeds on); a later request's install may
+        evict an earlier one's page mid-batch, so a pin pass re-installs
+        any batch page lost that way before the launch. Re-installs
+        count as ``bytes_moved`` (they are real copies) but not as
+        accesses — the demand stream saw each page exactly once.
+        The whole batch must fit the HBM pool.
+        """
+        if len(page_lists) != q.shape[0]:
+            raise ValueError(f"need one page list per query, got "
+                             f"{len(page_lists)} for batch {q.shape[0]}")
+        n_batch_pages = sum(len(p) for p in page_lists)
+        if n_batch_pages > self.n_hbm_slots:
+            raise ValueError(f"batch demands {n_batch_pages} pages but the"
+                             f" HBM pool has {self.n_hbm_slots} slots")
+        for pages in page_lists:
+            self.access(np.asarray(pages))
+        # pin pass: stamp every resident batch page newest, then install
+        # the missing ones — LRU eviction falls on non-batch pages, and
+        # each pass at worst consumes one prefetch second chance, so the
+        # slot-count bound covers settling (the batch fits the pool)
+        for _ in range(self.n_hbm_slots):
+            self.clock += 1
+            batch_pages = {int(p) for pages in page_lists for p in pages}
+            missing = []
+            for p in batch_pages:
+                s = self.page_slot.get(p)
+                if s is None:
+                    missing.append(p)
+                else:
+                    self.slot_stamp[s] = self.clock
+            if not missing:
+                break
+            for p in missing:
+                self.clock += 1
+                self._install(p, prefetched=False)
+        else:
+            raise RuntimeError("batch pages failed to settle in HBM")
+        width = max(len(p) for p in page_lists)
+        tab = np.zeros((len(page_lists), width), np.int64)
+        for i, pages in enumerate(page_lists):
+            tab[i, : len(pages)] = [self.page_slot[int(p)] for p in pages]
+        return kops.paged_decode(q.astype(jnp.float32),
+                                 jnp.asarray(self.hbm_k),
+                                 jnp.asarray(self.hbm_v),
+                                 jnp.asarray(tab, jnp.int32),
+                                 jnp.asarray(lengths, jnp.int32))

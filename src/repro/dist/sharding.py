@@ -165,6 +165,43 @@ def lane_specs(tree, mesh, axis: str = "lanes"):
     return jax.tree.map(leaf, tree)
 
 
+def ring_specs(tree, mesh, axis: str = "lanes"):
+    """Ring-staged request slabs (the streaming engine's ``(chunk, W)``
+    buffers, DESIGN.md §10): the lane axis is the LAST dim — time leads
+    so the chunk scan can unstack it — and shards over ``axis`` under
+    the divisibility contract. Leading dims (time, ring depth) never
+    shard: every device consumes every time step of its own lanes."""
+    size = axis_sizes(mesh).get(axis, 1)
+
+    def leaf(x) -> P:
+        shape = tuple(x.shape)
+        spec: list = [None] * len(shape)
+        if shape and size > 1 and shape[-1] % size == 0:
+            spec[-1] = axis
+        return P(*spec)
+
+    return jax.tree.map(leaf, tree)
+
+
+def occupancy_specs(tree, mesh, axis: str = "lanes"):
+    """Per-lane occupancy/admission vectors (the streaming engine's
+    ``(W,)`` reset masks and validity bitmaps): rank-1 leaves shard
+    their only dim over ``axis``; anything else replicates. Keeping the
+    occupancy state sharded like the carry means lane recycling — a
+    masked reset of recycled lanes — preserves the carry's lane
+    sharding instead of forcing a regather per admission."""
+    size = axis_sizes(mesh).get(axis, 1)
+
+    def leaf(x) -> P:
+        shape = tuple(x.shape)
+        spec: list = [None] * len(shape)
+        if len(shape) == 1 and size > 1 and shape[0] % size == 0:
+            spec[0] = axis
+        return P(*spec)
+
+    return jax.tree.map(leaf, tree)
+
+
 def cache_specs(cache, mesh):
     """Decode KV caches: leaves are (layer_stack, batch, ...); batch
     shards over the data axes and K/V head dims over "model" (TP serving

@@ -9,17 +9,26 @@ step the decode batch; per-request KV lives in pages managed by the
 tiered cache (host pool <-> "HBM" slots) with MITHRIL prefetching the
 pages of co-scheduled requests. The same loop drives full configs on a
 TPU mesh (weights in tp_serve layout).
+
+``TieredServeEngine`` is the MEASURED serving scenario (DESIGN.md §10):
+continuous-batching decode over the tiered paged-KV cache under a
+multi-tenant arrival process, reporting throughput and latency
+percentiles — the benchmarked replacement for the fig8 latency *model*
+(``benchmarks/serving_bench.py`` drives it).
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import time
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.tiered import TieredKVCache
 from repro.configs import get_config, reduced_config
 from repro.core import MithrilConfig
 from repro.models import decode_step, init_params, prefill
@@ -57,6 +66,124 @@ class ServeLoop:
             st["pos"] += 1
             self.stats["tokens"] += 1
         self.stats["decode_steps"] += 1
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    arr = np.asarray(xs, np.float64)
+    return {p: float(np.percentile(arr, q))
+            for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+
+class TieredServeEngine:
+    """Continuous-batching decode over a MITHRIL-managed paged-KV tier
+    under a multi-tenant arrival process — the MEASURED serving scenario.
+
+    Requests carry page working sets; each virtual step flash-decodes
+    the active batch via ``TieredKVCache.attend_batch`` (one kernel
+    launch, residency demanded through the tier so MITHRIL sees the
+    interleaved page stream). ``metrics()`` splits deterministic
+    virtual-step counters (tokens, turnaround percentiles, tier hit
+    ratio — FAIL-gated in benchmarks/compare.py) from wall-clock
+    measurements (tok/s, step-latency percentiles — WARN-gated).
+    """
+
+    def __init__(self, tier: TieredKVCache, *, max_batch: int = 8,
+                 n_q_heads: int = 4, seed: int = 0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.tier = tier
+        self.max_batch = int(max_batch)
+        self.n_q_heads = int(n_q_heads)
+        self._rng = np.random.default_rng(seed)
+        self.queue: collections.deque = collections.deque()
+        self.active: Dict[int, dict] = {}
+        self.clock = 0                       # virtual step counter
+        self.tokens = 0
+        self.steps = 0
+        self.turnaround: Dict[int, int] = {}  # rid -> steps in system
+        self.occupancy: List[int] = []
+        self.step_seconds: List[float] = []
+
+    def submit(self, rid: int, pages: np.ndarray, decode_steps: int,
+               arrival: int = 0):
+        """Enqueue a request: decode ``decode_steps`` tokens over the KV
+        ``pages``; eligible for admission once clock >= ``arrival``.
+        Submissions must be in nondecreasing arrival order (FIFO)."""
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
+        if self.queue and int(arrival) < self.queue[-1]["arrival"]:
+            raise ValueError("submissions must be in arrival order")
+        self.queue.append({"rid": int(rid),
+                           "pages": np.asarray(pages, np.int64),
+                           "remaining": int(decode_steps),
+                           "arrival": int(arrival)})
+
+    def _admit(self):
+        while self.queue and len(self.active) < self.max_batch \
+                and self.queue[0]["arrival"] <= self.clock:
+            req = self.queue.popleft()
+            self.active[req["rid"]] = req
+
+    def step(self):
+        """One continuous-batch decode step over the active requests."""
+        t0 = time.perf_counter()
+        self._admit()
+        if not self.active:
+            self.clock += 1
+            return
+        rids = sorted(self.active)            # deterministic batch order
+        page_lists = [self.active[r]["pages"] for r in rids]
+        lengths = np.asarray(
+            [len(p) * self.tier.page_size for p in page_lists], np.int64)
+        q = jnp.asarray(self._rng.standard_normal(
+            (len(rids), self.n_q_heads, self.tier.head_dim)), jnp.float32)
+        out = self.tier.attend_batch(q, page_lists, lengths)
+        jax.block_until_ready(out)
+        self.occupancy.append(len(rids))
+        for rid in rids:
+            req = self.active[rid]
+            req["remaining"] -= 1
+            self.tokens += 1
+            if req["remaining"] == 0:
+                self.turnaround[rid] = self.clock - req["arrival"] + 1
+                del self.active[rid]
+        self.steps += 1
+        self.clock += 1
+        self.step_seconds.append(time.perf_counter() - t0)
+
+    def run(self):
+        """Drive until every submitted request has retired."""
+        while self.active or self.queue:
+            if not self.active and self.queue \
+                    and self.queue[0]["arrival"] > self.clock:
+                self.clock = self.queue[0]["arrival"]   # fast-forward idle
+            self.step()
+        return self.metrics()
+
+    def metrics(self) -> Dict[str, object]:
+        turn = _percentiles([float(v) for v in self.turnaround.values()])
+        lat = _percentiles(self.step_seconds)
+        wall = float(sum(self.step_seconds))
+        return {
+            # deterministic virtual-step counters (FAIL-gated)
+            "requests": len(self.turnaround),
+            "tokens": self.tokens,
+            "steps": self.steps,
+            "mean_batch_occupancy": round(
+                float(np.mean(self.occupancy)) if self.occupancy else 0.0, 4),
+            "turnaround_steps_p50": turn["p50"],
+            "turnaround_steps_p95": turn["p95"],
+            "turnaround_steps_p99": turn["p99"],
+            "tier": self.tier.stats.as_dict(),
+            # wall-clock measurements (WARN-gated)
+            "wall_seconds": round(wall, 4),
+            "throughput_tok_s": round(self.tokens / max(wall, 1e-9), 2),
+            "step_latency_s_p50": round(lat["p50"], 6),
+            "step_latency_s_p95": round(lat["p95"], 6),
+            "step_latency_s_p99": round(lat["p99"], 6),
+        }
 
 
 def main(argv=None):

@@ -1,15 +1,16 @@
 """Synthetic trace generators, corpus registry + io (DESIGN.md §8)."""
 
-from .synthetic import (association_groups, interleaved_sequential, looping,
-                        mixed, padded_suite, representative_traces,
-                        stack_padded, suite, zipf)
+from .synthetic import (arrival_process, association_groups,
+                        interleaved_sequential, looping, mixed, padded_suite,
+                        representative_traces, stack_padded, suite, zipf)
 from .corpus import (FAMILIES, SCALES, WorkloadSpec, build_corpus,
                      corpus_specs, corpus_suite, family_of)
 from .io import (ingest, ingest_msr_csv, ingest_raw, ingest_to_npz,
                  load_traces, save_traces, workload_stats)
 
 __all__ = [
-    "association_groups", "interleaved_sequential", "looping", "mixed",
+    "arrival_process", "association_groups", "interleaved_sequential",
+    "looping", "mixed",
     "padded_suite", "representative_traces", "stack_padded", "suite", "zipf",
     "FAMILIES", "SCALES", "WorkloadSpec", "build_corpus", "corpus_specs",
     "corpus_suite", "family_of",

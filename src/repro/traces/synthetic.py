@@ -216,6 +216,57 @@ def padded_suite(n_requests: int = 60_000, n_traces: int = 30,
     return names, blocks, lengths
 
 
+def arrival_process(traces: Dict[str, np.ndarray], mode: str = "poisson",
+                    rate: float = 1.0, burst_len: int = 64,
+                    idle_len: int = 192, stagger: int = 0,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Per-tenant request arrival steps on the streaming virtual clock.
+
+    Turns a name->trace dict into a name->arrivals dict for the
+    streaming engine (``cache.sweep.sweep_streaming``) and the serving
+    benchmark: ``arrivals[name][k]`` is the earliest virtual step at
+    which request ``k`` of tenant ``name`` may run, nondecreasing per
+    tenant. Two processes:
+
+    * ``poisson`` — independent exponential inter-arrival times with
+      mean ``1 / rate`` requests/step per tenant (open-loop traffic);
+    * ``onoff`` — alternating bursts (``burst_len`` back-to-back
+      requests, one per step) and idle gaps (``idle_len`` steps), the
+      bursty tenant shape that exercises lane recycling: a tenant's
+      lane drains and is reclaimed while the tenant idles.
+
+    Each tenant additionally starts at a uniform random offset in
+    ``[0, stagger]`` so admissions spread over the ramp. Seeding is
+    content-addressed like ``traces/corpus.py``: each tenant draws from
+    ``crc32(f"{mode}:{seed}:{name}")``, so arrivals are reproducible
+    per (name, mode, seed) regardless of dict order or suite
+    composition — never Python ``hash``.
+    """
+    import zlib
+
+    if mode not in ("poisson", "onoff"):
+        raise ValueError(f"mode must be poisson|onoff, got {mode!r}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    if burst_len < 1 or idle_len < 0 or stagger < 0:
+        raise ValueError("burst_len >= 1, idle_len >= 0, stagger >= 0")
+    out: Dict[str, np.ndarray] = {}
+    for name, trace in traces.items():
+        n = len(trace)
+        key = zlib.crc32(f"{mode}:{seed}:{name}".encode()) & 0x7FFFFFFF
+        rng = np.random.default_rng(key)
+        start = int(rng.integers(0, stagger + 1))
+        if mode == "poisson":
+            steps = np.floor(np.cumsum(
+                rng.exponential(1.0 / rate, size=n))).astype(np.int64)
+        else:
+            k = np.arange(n, dtype=np.int64)
+            phase = int(rng.integers(0, burst_len))
+            steps = k + ((k + phase) // burst_len) * idle_len
+        out[name] = steps + start
+    return out
+
+
 def representative_traces(n_requests: int = 60_000) -> Dict[str, np.ndarray]:
     """Six traces mirroring the paper's Fig. 5 regimes."""
     return {

@@ -61,7 +61,10 @@ class TestPlan:
         lengths = np.array([900, 100, 500, 700, 300])
         plan = plan_sweep(lengths, lane_width=2, chunk=256, n_shards=1)
         for g in plan.groups:
-            assert g.padded_t % plan.chunk == 0
+            # each group pads to a multiple of its OWN chunk (the packer
+            # may pick a finer time chunk for short-trace groups)
+            assert g.padded_t % g.chunk == 0
+            assert 1 <= g.chunk <= plan.chunk
             assert g.padded_t >= lengths[list(g.indices)].max()
             assert len(g.indices) <= g.lane_width
 
@@ -112,7 +115,10 @@ class TestPacker:
         for max_shapes in (1, 2, 3):
             plan = plan_sweep(lengths, chunk=4096, n_shards=1,
                               max_shapes=max_shapes)
-            assert 1 <= len(plan.shape_widths) <= max_shapes
+            # the budget counts distinct (chunk, width) slab SHAPES, of
+            # which distinct widths are a coarsening
+            assert 1 <= len(plan.shapes) <= max_shapes
+            assert len(plan.shape_widths) <= len(plan.shapes)
         with pytest.raises(ValueError, match="max_shapes"):
             plan_sweep(lengths, max_shapes=0)
 
