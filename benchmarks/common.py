@@ -58,6 +58,7 @@ def pf_src_of(cfg: SimConfig) -> int:
 _TELEMETRY: List[dict] = []
 _PACKER: List[dict] = []
 _SERVING: List[dict] = []
+_KERNELS: List[dict] = []
 
 
 def record_sweep(job: str, config: str, cfg: SimConfig,
@@ -138,6 +139,33 @@ def serving_telemetry() -> List[dict]:
     return list(_SERVING)
 
 
+def record_kernel(kernel: str, shape: str, matches_oracle: bool,
+                  roofline: Dict, wallclock_us: float = None) -> None:
+    """Log one kernel-microbenchmark roofline point for BENCH json.
+
+    ``roofline`` is ``KernelRoofline.to_dict()``: bytes moved and the
+    arithmetic-intensity model are geometry-pure, so ``compare``
+    FAIL-gates them (and ``matches_oracle``) like hit ratios; wall-clock
+    is interpret-mode on CPU CI and only WARNs at the same geometry.
+    """
+    entry = {"kernel": kernel, "shape": shape,
+             "matches_oracle": bool(matches_oracle),
+             "wallclock_us": (None if wallclock_us is None
+                              else round(float(wallclock_us), 1)),
+             **roofline}
+    _KERNELS.append(entry)
+    print(f"  [kernel] {kernel:<22} {shape:<24} match={matches_oracle} "
+          f"bytes={entry['bytes_moved'] / 1024:.0f}KB "
+          f"ai={entry['intensity']:.3f} "
+          f"peak_frac={entry['peak_fraction']:.4f}"
+          + (f" wall={entry['wallclock_us']:.0f}us"
+             if entry["wallclock_us"] is not None else ""))
+
+
+def kernels_telemetry() -> List[dict]:
+    return list(_KERNELS)
+
+
 def write_bench_json(meta: dict, jobs: List[dict]) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_sweep.json")
@@ -145,7 +173,8 @@ def write_bench_json(meta: dict, jobs: List[dict]) -> str:
         json.dump({"meta": meta, "jobs": jobs,
                    "sweeps": sweep_telemetry(),
                    "packer": packer_telemetry(),
-                   "serving": serving_telemetry()}, f, indent=2)
+                   "serving": serving_telemetry(),
+                   "kernels": kernels_telemetry()}, f, indent=2)
     print(f"wrote {path}")
     return path
 

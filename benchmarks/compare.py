@@ -29,7 +29,12 @@ Policy (make CI *compare* trajectories, not just archive them):
   two ways — virtual-step counters (tokens, turnaround percentiles,
   batch occupancy, the whole tier counter dict) are deterministic
   given the workload, so any drift FAILS; wall-clock throughput and
-  step-latency percentiles only WARN, like sweep wall-clock.
+  step-latency percentiles only WARN, like sweep wall-clock;
+* per-kernel roofline (ISSUE 7): kernel-vs-oracle agreement FAILs on
+  mismatch, and the roofline bytes-moved model is pure arithmetic over
+  the launch geometry, so any bytes regression vs the baseline FAILS
+  (improvements are noted); interpret-mode kernel wall-clock only
+  WARNs past ``--wallclock-warn`` at the same geometry.
 
 Refresh a geometry's baseline by copying a trusted run of that suite:
 
@@ -165,6 +170,46 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
                                  for s in fresh.get("serving", [])}:
         if base_ix:
             failures.append(f"serving {key}: missing from fresh run")
+
+    # per-kernel roofline (ISSUE 7): oracle agreement and the
+    # geometry-pure cost model (bytes moved) FAIL on regression —
+    # bytes are pure arithmetic over the launch geometry, so any
+    # increase is a layout/blocking change that must be intentional;
+    # interpret-mode wall-clock only WARNs, like sweep wall-clock
+    base_kn = {(k["kernel"], k["shape"]): k
+               for k in baseline.get("kernels", [])}
+    for k in fresh.get("kernels", []):
+        key = (k["kernel"], k["shape"])
+        if not k.get("matches_oracle", True):
+            failures.append(f"kernel {key}: kernel-vs-oracle mismatch")
+        b = base_kn.get(key)
+        if b is None:
+            notes.append(f"kernel {key}: not in baseline "
+                         "(new kernel point, unchecked)")
+            continue
+        if not base_ix:     # geometry mismatch cleared the comparison
+            continue
+        if k["bytes_moved"] > b["bytes_moved"] + HIT_TOL:
+            failures.append(
+                f"kernel {key}: bytes moved regressed "
+                f"{b['bytes_moved']:.0f} -> {k['bytes_moved']:.0f}")
+        elif k["bytes_moved"] < b["bytes_moved"] - HIT_TOL:
+            notes.append(
+                f"kernel {key}: bytes moved improved "
+                f"{b['bytes_moved']:.0f} -> {k['bytes_moved']:.0f} "
+                "(baseline refresh will pin it)")
+        if (b.get("wallclock_us") and k.get("wallclock_us")
+                and k["wallclock_us"]
+                > b["wallclock_us"] * (1 + wallclock_warn)):
+            warnings.append(
+                f"kernel {key}: wall-clock {b['wallclock_us']:.0f}us -> "
+                f"{k['wallclock_us']:.0f}us "
+                f"(+{100 * (k['wallclock_us'] / b['wallclock_us'] - 1):.0f}%)")
+
+    for key in base_kn.keys() - {(k["kernel"], k["shape"])
+                                 for k in fresh.get("kernels", [])}:
+        if base_ix:
+            failures.append(f"kernel {key}: missing from fresh run")
 
     failed_jobs = [j for j in fresh.get("jobs", [])
                    if j.get("status") != "ok"]

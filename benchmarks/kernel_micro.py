@@ -1,23 +1,40 @@
-"""Kernel microbenchmarks: oracle-vs-kernel agreement scale sweep + the
-VMEM/arithmetic accounting that justifies the BlockSpec choices.
+"""Kernel microbenchmarks: oracle-vs-kernel agreement + per-kernel roofline.
 
-Wall-clock here is CPU interpret-mode (NOT TPU perf); the meaningful
-numbers are the footprint/arithmetic-intensity calculations used to pick
-block shapes (DESIGN.md §2), reported per kernel.
+    PYTHONPATH=src python -m benchmarks.kernel_micro
+
+Every Pallas kernel on the request path is checked bit-for-bit (exact
+for the int32 mining/record kernels, tolerance for the float decode
+kernel) against its jnp oracle, then priced by the per-kernel roofline
+analyzer (``repro.roofline.analysis.analyze_kernel``): bytes moved
+through VMEM, flops, arithmetic intensity and attainable machine-peak
+fraction for the launch geometry. The roofline numbers are geometry-pure
+(no timing involved) so ``benchmarks.compare`` FAIL-gates them like hit
+ratios; wall-clock here is CPU interpret-mode (NOT TPU perf, DESIGN.md
+§11) and only ever WARNs.
+
+Artifacts: ``kernel_micro.csv`` (agreement sweep), ``kernel_roofline.csv``
+(the roofline table), plus the ``"kernels"`` section of
+``BENCH_sweep.json`` when run under ``benchmarks.run``.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import MithrilConfig, init_state, record_event
 from repro.core.mining import pairwise_codes
 from repro.kernels import ops
+from repro.roofline import analyze_kernel
 
-from .common import write_csv
+from .common import record_kernel, write_csv
+
+ROOFLINE_HEADER = ("kernel,shape,backend,bytes_moved,flops,intensity,"
+                   "peak_fraction,trusted_peaks")
 
 
 def mine_accounting(n, s, window, blk=128):
@@ -32,10 +49,55 @@ def paged_accounting(hq, hd, ps, n_kv):
     return vmem, flops
 
 
-def main():
-    rows = []
-    rng = np.random.default_rng(0)
+def _roofline_row(rl):
+    return [rl.kernel, rl.geometry_label, rl.backend, int(rl.bytes_moved),
+            int(rl.flops), f"{rl.intensity:.4f}", f"{rl.peak_fraction:.4f}",
+            rl.trusted_peaks]
 
+
+def bench_record_fused(rows, roofs):
+    """Fused record kernel vs the vmapped scatter oracle, per event."""
+    for (lanes, nb, w, mine_rows) in [(4, 16, 2, 16), (8, 64, 2, 32)]:
+        cfg = MithrilConfig(min_support=2, max_support=4, lookahead=8,
+                            rec_buckets=nb, rec_ways=w,
+                            mine_rows=mine_rows, pf_buckets=nb, pf_ways=w,
+                            prefetch_list=2)
+        states = jax.vmap(lambda _: init_state(cfg))(jnp.arange(lanes))
+        rng = np.random.default_rng(7)
+        n_ev = 24
+        blocks = rng.integers(0, 4 * nb, size=(n_ev, lanes)).astype(np.int32)
+        ens = rng.integers(0, 2, size=(n_ev, lanes)).astype(bool)
+
+        oracle = fused = states
+        t_us = 0.0
+        for t in range(n_ev):
+            b, e = jnp.asarray(blocks[t]), jnp.asarray(ens[t])
+            oracle = jax.vmap(
+                lambda s, bb, ee: record_event(cfg, s, bb, ee))(oracle, b, e)
+            t0 = time.time()
+            fused = ops.mithril_record_fused(fused, b, e, interpret=True)
+            jax.block_until_ready(fused)
+            t_us += (time.time() - t0) * 1e6
+        ok = all(bool(jnp.array_equal(getattr(oracle, f), getattr(fused, f)))
+                 for f in oracle._fields)
+        r_sup, s_sup = oracle.rec_ts.shape[-1], oracle.mine_ts.shape[-1]
+        geom = dict(lanes=lanes, n_buckets=nb, ways=w, r_sup=r_sup,
+                    mine_rows=mine_rows, s_sup=s_sup)
+        shape = f"l={lanes},nb={nb},w={w},nm={mine_rows}"
+        rl = analyze_kernel("mithril_record_fused", geom)
+        rl.geometry_label = shape
+        rows.append(["mithril_record_fused", shape, ok,
+                     f"{t_us / n_ev:.0f}", int(rl.bytes_moved),
+                     int(rl.flops)])
+        roofs.append(rl)
+        record_kernel("mithril_record_fused", shape, ok, rl.to_dict(),
+                      wallclock_us=t_us / n_ev)
+        print(f"record l={lanes} nb={nb}: match={ok} "
+              f"bytes={rl.bytes_moved / 1024:.0f}KB ai={rl.intensity:.3f} "
+              f"interp={t_us / n_ev:.0f}us/event")
+
+
+def bench_mine(rows, roofs, rng):
     for (n, s, window) in [(256, 8, 32), (1024, 8, 64), (4096, 8, 100)]:
         cnt = rng.integers(2, s + 1, size=n).astype(np.int32)
         base = np.sort(rng.integers(0, 50 * n, size=n)).astype(np.int32)
@@ -53,11 +115,20 @@ def main():
             ops.mithril_pairwise(*args, 60, window).block_until_ready()
         t_k = (time.time() - t0) / 3
         vmem, comp = mine_accounting(n, s, window)
-        rows.append(["mithril_mine", f"n={n},w={window}", ok,
-                     f"{t_k*1e6:.0f}", vmem, comp])
+        shape = f"n={n},w={window}"
+        rows.append(["mithril_mine", shape, ok, f"{t_k*1e6:.0f}", vmem, comp])
+        rl = analyze_kernel("mithril_mine_batched",
+                            dict(lanes=1, mine_rows=n, s_sup=s,
+                                 window=window))
+        rl.geometry_label = shape
+        roofs.append(rl)
+        record_kernel("mithril_mine_batched", shape, ok, rl.to_dict(),
+                      wallclock_us=t_k * 1e6)
         print(f"mine n={n} w={window}: match={ok} vmem={vmem/1024:.0f}KB "
               f"compares={comp/1e6:.1f}M interp={t_k*1e3:.1f}ms")
 
+
+def bench_paged(rows, roofs, rng):
     for (b, hq, hkv, hd, ps, npg) in [(4, 32, 8, 128, 16, 8),
                                       (8, 16, 4, 64, 32, 16)]:
         npt = npg * b + 1
@@ -73,14 +144,36 @@ def main():
         want = ref.paged_decode_ref(q, kp, vp, ptab, lens)
         ok = bool(jnp.allclose(got, want, rtol=2e-4, atol=2e-4))
         vmem, flops = paged_accounting(hq, hd, ps, hkv)
-        rows.append(["paged_decode", f"b={b},hq={hq},ps={ps}", ok, "-",
-                     vmem, flops])
+        shape = f"b={b},hq={hq},ps={ps}"
+        rows.append(["paged_decode", shape, ok, "-", vmem, flops])
+        rl = analyze_kernel("paged_decode",
+                            dict(batch=b, heads_q=hq, heads_kv=hkv,
+                                 head_dim=hd, page_size=ps, n_pages=npg))
+        rl.geometry_label = shape
+        roofs.append(rl)
+        record_kernel("paged_decode", shape, ok, rl.to_dict())
         print(f"paged b={b} hq={hq}: match={ok} vmem/step={vmem/1024:.0f}KB "
               f"flops/page={flops/1e3:.0f}K")
 
+
+def main():
+    rows, roofs = [], []
+    rng = np.random.default_rng(0)
+
+    bench_record_fused(rows, roofs)
+    bench_mine(rows, roofs, rng)
+    bench_paged(rows, roofs, rng)
+
     write_csv("kernel_micro.csv",
               "kernel,shape,matches_oracle,interp_us,vmem_bytes,arith", rows)
+    write_csv("kernel_roofline.csv", ROOFLINE_HEADER,
+              [_roofline_row(rl) for rl in roofs])
+
+
+def _parser() -> argparse.ArgumentParser:
+    return argparse.ArgumentParser(description=__doc__.splitlines()[0])
 
 
 if __name__ == "__main__":
+    _parser().parse_args()
     main()

@@ -169,6 +169,20 @@ def build_segments(cfg: SimConfig):
                                     enabled=aux["valid"])
         return {**carry, "mith": mith}, aux
 
+    # ``record_gate`` marks a segment as a pure MITHRIL recording event
+    # and exposes its (block, enabled) expressions in elementwise form.
+    # The batched step builder (sweep.py) uses it to route the segment
+    # through ``mithril.record_event_batched`` — the fused Pallas record
+    # kernel on TPU, the identical vmapped scatter form elsewhere —
+    # instead of vmapping the segment closure. The expressions MUST
+    # mirror the segment bodies above; ``tests/test_record_kernel.py``
+    # pins the two paths bit-identical.
+    seg_record_miss.record_gate = \
+        lambda block, aux: (block, aux["valid"] & ~aux["hit"])
+    seg_record_evict.record_gate = \
+        lambda block, aux: (aux["ev"].block, aux["ev"].block != EMPTY)
+    seg_record_all.record_gate = lambda block, aux: (block, aux["valid"])
+
     def seg_prefetch(carry, block, aux):
         """Prefetch issue for every enabled layer (no mining in here)."""
         valid = aux["valid"]

@@ -106,6 +106,25 @@ def _batched_pairwise_fn():
     return mithril_pairwise_batched, mithril_pairwise
 
 
+def _batched_record_fn():
+    """Record-event implementation for the vmapped request path.
+
+    Same dispatch shape as :func:`_batched_pairwise_fn`: on TPU the
+    fused record kernel (``kernels.mithril_record_fused`` — locate
+    probe + circular-buffer stamp + mining-table insert in ONE launch
+    per request slab, DESIGN.md §11) replaces the eleven per-table XLA
+    scatters; elsewhere ``None`` defers to
+    ``mithril.record_event_batched``'s default — the vmapped pure-jnp
+    scatter form, which beats interpreted kernels. Kernel and scatter
+    form are bit-identical (``tests/test_record_kernel.py``).
+    """
+    from repro.kernels.backend import on_tpu
+    if not on_tpu():
+        return None
+    from repro.kernels.ops import mithril_record_fused
+    return mithril_record_fused
+
+
 def build_batched_step(cfg: SimConfig):
     """Returns (init_batched, step) for a scan over (chunk, B) request slabs.
 
@@ -119,6 +138,7 @@ def build_batched_step(cfg: SimConfig):
     mine_rows = cfg.mithril.mine_rows
     pairwise_fn, serial_pairwise_fn = (
         _batched_pairwise_fn() if cfg.use_mithril else (None, None))
+    record_fn = _batched_record_fn() if cfg.use_mithril else None
 
     def init_batched(batch_size: int):
         return jax.vmap(lambda _: init_carry())(jnp.arange(batch_size))
@@ -149,7 +169,18 @@ def build_batched_step(cfg: SimConfig):
         # carry-wide select — the old whole-table copy per step
         new, aux = carry, {"valid": valid}
         for fn, mine_after in segments:
-            new, aux = jax.vmap(fn)(new, block, aux)
+            gate = getattr(fn, "record_gate", None)
+            if gate is not None:
+                # pure recording segment: route through the batched
+                # record path (fused Pallas kernel on TPU, identical
+                # vmapped scatter form elsewhere) instead of vmapping
+                # the segment closure
+                blk, en = gate(block, aux)
+                new = {**new, "mith": mithril.record_event_batched(
+                    cfg.mithril, new["mith"], blk, en,
+                    fused_fn=record_fn)}
+            else:
+                new, aux = jax.vmap(fn)(new, block, aux)
             if mine_after:
                 new = {**new,
                        "mith": batched_maybe_mine(new["mith"], valid)}

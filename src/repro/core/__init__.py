@@ -8,7 +8,8 @@ fixed-shape recording/mining/prefetching tables, the mining procedure
 from .config import MithrilConfig
 from .state import MithrilState, init_state
 from .mithril import (access, add_association, init, lookup, maybe_mine,
-                      mine, mine_batched, record, record_event)
+                      mine, mine_batched, record, record_event,
+                      record_event_batched)
 from .mining import (associations_dense, associations_dense_batched,
                      mine_reference_sequential, pairwise_codes,
                      pairwise_codes_batched, select_pairs, sort_by_first_ts)
@@ -17,7 +18,7 @@ from .hashindex import EMPTY
 __all__ = [
     "MithrilConfig", "MithrilState", "init_state", "init",
     "access", "add_association", "lookup", "mine", "record",
-    "record_event", "maybe_mine", "mine_batched",
+    "record_event", "record_event_batched", "maybe_mine", "mine_batched",
     "associations_dense", "associations_dense_batched",
     "mine_reference_sequential", "pairwise_codes", "pairwise_codes_batched",
     "select_pairs", "sort_by_first_ts", "EMPTY",

@@ -241,6 +241,16 @@ def record_event(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
 
       recording table  (bucket, way)    way = probe hit or victim
       mining table     (row,)           row = migration target or rec_row
+
+    Fused Pallas path: on TPU the whole function — probe, stamp and
+    mining-table insert — runs as ONE kernel launch per request slab
+    (``kernels.mithril_record_fused``, DESIGN.md §11) instead of one
+    XLA scatter per table. Batched callers go through
+    :func:`record_event_batched`, which keeps this scatter form as the
+    off-TPU implementation; the two are bit-identical per event
+    (``tests/test_record_kernel.py``), so the contract here — no
+    mining, ``enabled=False`` no-op, one write per table — IS the
+    kernel's contract.
     """
     i32 = jnp.int32
     r_sup, s_sup = cfg.min_support, cfg.max_support
@@ -306,13 +316,41 @@ def record_event(cfg: MithrilConfig, state: MithrilState, block: jax.Array,
     )
 
 
+def record_event_batched(cfg: MithrilConfig, states: MithrilState,
+                         blocks: jax.Array, enabled: jax.Array,
+                         fused_fn: Optional[Callable] = None
+                         ) -> MithrilState:
+    """Advance every lane by one recording event (the sweep hot path).
+
+    ``states`` is a stacked :class:`MithrilState` with a leading ``(B,)``
+    lanes axis; ``blocks``/``enabled`` are ``(B,)``. Default is the
+    vmapped scatter form — exactly what the batched step used to trace —
+    and ``fused_fn(states, blocks, enabled)`` swaps in the fused Pallas
+    kernel (``kernels.mithril_record_fused``) when the sweep engine's
+    backend dispatch (``sweep._batched_record_fn``) selects it on TPU.
+    Both implementations are bit-identical per event and inherit the
+    :func:`record_event` contract: no mining happens here, so callers
+    MUST run the batch-level ``maybe_mine`` barrier before the next
+    recording event.
+    """
+    if fused_fn is not None:
+        return fused_fn(states, blocks, enabled)
+    enabled = jnp.broadcast_to(jnp.asarray(enabled), blocks.shape)
+    return jax.vmap(lambda s, b, e: record_event(cfg, s, b, e))(
+        states, blocks, enabled)
+
+
 def maybe_mine(cfg: MithrilConfig, state: MithrilState,
                pairwise_fn: Optional[Callable] = None) -> MithrilState:
     """Run ``mine`` iff the mining table is full (the Alg. 3 trigger).
 
     This is the second half of the record/maybe_mine contract: it must
-    run between any :func:`record_event` and the next one, restoring the
-    ``mine_fill < mine_rows`` invariant the migration scatter assumes.
+    run between any :func:`record_event` and the next one — whichever
+    form the event took (serial scatter, vmapped scatter, or the fused
+    Pallas kernel via :func:`record_event_batched`) — restoring the
+    ``mine_fill < mine_rows`` invariant the migration write assumes.
+    The batched sweep engine runs it as a batch-level ``lax.cond``
+    barrier (``sweep.build_batched_step``) rather than per lane.
     """
     return lax.cond(
         state.mine_fill >= cfg.mine_rows,

@@ -1,0 +1,222 @@
+"""Pallas TPU kernel: the fused per-request MITHRIL record path.
+
+The branchless scatter form of ``core.mithril.record_event`` (DESIGN.md
+§7) still leaves XLA to emit one gather + one ``.at[].set`` scatter per
+state leaf per request — eleven separate HBM round trips through the
+recording and mining tables for every recorded event. This kernel fuses
+the whole record path — the ``hashindex.locate`` probe, the
+recording-table circular-buffer timestamp stamp, and the
+mining/prefetch-metadata table insert (migration) — into ONE launch per
+request slab: grid ``(lanes,)``, each program holding one lane's record
+and mining tables in VMEM via leading-1 BlockSpecs (the
+``mithril_mine_batched`` layout), with every table update a single-row
+dynamic-slice store. Memory layout, probe sequence and padded-lane
+masking are documented in DESIGN.md §11.
+
+Table layout inside the kernel (per lane; wrapper reshapes):
+
+* recording table — ``rec_key/cnt/age/loc/row`` keep their ``(NB, W)``
+  shape; the probed bucket is the ``(1, W)`` slab at ``pl.ds(b, 1)``.
+  ``rec_ts`` is flattened to ``(NB*W, R)`` so the ONE way whose
+  timestamp row changes is the ``(1, R)`` slab at ``pl.ds(b*W + w, 1)``
+  — no 4-D refs, no masked whole-bucket writes;
+* mining table — ``mine_block/cnt`` carried as ``(Nm, 1)`` columns (the
+  batched mining kernel's convention), ``mine_ts`` as ``(Nm, S)``; the
+  touched row is the ``pl.ds(m, 1)`` slab;
+* scalars — ``block/enabled/mine_fill/ts`` as ``(1, 1)`` lane blocks.
+
+``enabled == 0`` lanes (padded tails, gated record policies) write every
+touched row back with its old contents — the same bit-exact no-op
+contract as the scatter form, so the sweep engine needs no lane masking
+around the launch. Outputs alias inputs (``input_output_aliases``) so
+the tables update in place on TPU. Bit-identity against
+``record_event`` is pinned per event by ``tests/test_record_kernel.py``
+(frozen-oracle property tests, interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .backend import default_interpret
+from .hash_lookup import _mix32
+
+EMPTY = -1
+
+
+def _first_true(mask, iota, width):
+    """Index of the first True in a (1, W) mask (W if none) — the
+    branchless equivalent of ``jnp.argmax(mask)`` first-hit semantics."""
+    return jnp.min(jnp.where(mask, iota, width))
+
+
+def _record_kernel(block_ref, enabled_ref, rec_key_ref, rec_ts_ref,
+                   rec_cnt_ref, rec_age_ref, rec_loc_ref, rec_row_ref,
+                   mine_block_ref, mine_ts_ref, mine_cnt_ref, mine_fill_ref,
+                   ts_ref,
+                   o_rec_key, o_rec_ts, o_rec_cnt, o_rec_age, o_rec_loc,
+                   o_rec_row, o_mine_block, o_mine_ts, o_mine_cnt,
+                   o_mine_fill, o_ts, *, n_buckets: int, ways: int,
+                   r_sup: int, s_sup: int):
+    """Grid: (lanes,). Refs carry a leading lane dim of 1."""
+    i32 = jnp.int32
+
+    # copy-through: every output ref starts as its input table, so the
+    # row stores below are true in-place updates (and un-touched rows
+    # are defined even without input/output aliasing, e.g. interpret)
+    o_rec_key[...] = rec_key_ref[...]
+    o_rec_ts[...] = rec_ts_ref[...]
+    o_rec_cnt[...] = rec_cnt_ref[...]
+    o_rec_age[...] = rec_age_ref[...]
+    o_rec_loc[...] = rec_loc_ref[...]
+    o_rec_row[...] = rec_row_ref[...]
+    o_mine_block[...] = mine_block_ref[...]
+    o_mine_ts[...] = mine_ts_ref[...]
+    o_mine_cnt[...] = mine_cnt_ref[...]
+
+    blk = block_ref[0, 0]
+    en = enabled_ref[0, 0] != 0
+    ts = ts_ref[0, 0]
+    fill = mine_fill_ref[0, 0]
+
+    # --- hashindex.locate: probe the bucket, pick hit way or victim ---
+    b = jnp.bitwise_and(_mix32(blk), i32(n_buckets - 1))
+    keys_row = rec_key_ref[0, pl.ds(b, 1), :]             # (1, W)
+    age_row = rec_age_ref[0, pl.ds(b, 1), :]
+    cnt_row = rec_cnt_ref[0, pl.ds(b, 1), :]
+    loc_row = rec_loc_ref[0, pl.ds(b, 1), :]
+    row_row = rec_row_ref[0, pl.ds(b, 1), :]
+
+    kw = jax.lax.broadcasted_iota(i32, (1, ways), 1)
+    hit = keys_row == blk
+    found = jnp.any(hit)
+    way_hit = _first_true(hit, kw, ways)
+    empty = keys_row == EMPTY
+    first_empty = _first_true(empty, kw, ways)
+    oldest = _first_true(age_row == jnp.min(age_row), kw, ways)
+    victim = jnp.where(jnp.any(empty), first_empty, oldest)
+    w = jnp.where(found, way_hit, victim)
+    mask_w = kw == w
+
+    def pick(row):          # the (b, w) scalar out of a (1, W) slab
+        return jnp.sum(jnp.where(mask_w, row, 0))
+
+    old_cnt, old_age = pick(cnt_row), pick(age_row)
+    old_loc, old_row = pick(loc_row), pick(row_row)
+    in_mine = old_loc == 1
+    is_new = en & ~found
+    is_rec = en & found & ~in_mine
+    is_upd = en & found & in_mine
+
+    # --- recording-table circular-buffer stamp (one (1, R) row) ---
+    r = b * ways + w                                      # flat (bucket, way)
+    old_ts_row = rec_ts_ref[0, pl.ds(r, 1), :]            # (1, R)
+    kr = jax.lax.broadcasted_iota(i32, (1, r_sup), 1)
+    ts_row = jnp.where(is_new, jnp.where(kr == 0, ts, 0),
+                       jnp.where(is_rec, jnp.where(kr == old_cnt, ts,
+                                                   old_ts_row), old_ts_row))
+    cnt_val = jnp.where(is_new, 1, old_cnt + is_rec.astype(i32))
+    migrate = is_rec & (cnt_val >= r_sup)
+    if r_sup == 1:          # static branch: new rows are born mining-ready
+        migrate = migrate | is_new
+
+    # --- mining-table insert (one (1, S) row at m) ---
+    m = jnp.where(migrate, fill, jnp.where(is_upd, old_row, 0))
+    old_mblk = mine_block_ref[0, pl.ds(m, 1), :]          # (1, 1)
+    old_mts = mine_ts_ref[0, pl.ds(m, 1), :]              # (1, S)
+    old_mcnt_row = mine_cnt_ref[0, pl.ds(m, 1), :]        # (1, 1)
+    old_mcnt = old_mcnt_row[0, 0]
+    can = old_mcnt < s_sup
+    pos = jnp.minimum(old_mcnt, s_sup - 1)
+    ks = jax.lax.broadcasted_iota(i32, (1, s_sup), 1)
+    ts_at_ks = jnp.zeros((1, s_sup), i32)
+    for j in range(r_sup):  # static unroll: S, R are small table params
+        ts_at_ks = jnp.where(ks == j, ts_row[0, j], ts_at_ks)
+    mig_ts = jnp.where(ks < r_sup, ts_at_ks, old_mts)
+    upd_ts = jnp.where((ks == pos) & can, ts, old_mts)
+
+    # --- single-row stores (disabled events store the old values) ---
+    o_rec_key[0, pl.ds(b, 1), :] = jnp.where(
+        mask_w & is_new, blk, keys_row)
+    o_rec_ts[0, pl.ds(r, 1), :] = ts_row
+    o_rec_cnt[0, pl.ds(b, 1), :] = jnp.where(mask_w, cnt_val, cnt_row)
+    o_rec_age[0, pl.ds(b, 1), :] = jnp.where(
+        mask_w & is_new, ts, age_row)
+    o_rec_loc[0, pl.ds(b, 1), :] = jnp.where(
+        mask_w, jnp.where(migrate, 1, jnp.where(is_new, 0, old_loc)),
+        loc_row)
+    o_rec_row[0, pl.ds(b, 1), :] = jnp.where(
+        mask_w, jnp.where(migrate, fill, old_row), row_row)
+    o_mine_block[0, pl.ds(m, 1), :] = jnp.where(migrate, blk, old_mblk)
+    o_mine_ts[0, pl.ds(m, 1), :] = jnp.where(
+        migrate, mig_ts, jnp.where(is_upd, upd_ts, old_mts))
+    # exceeding S marks the block frequent (excluded from mining)
+    o_mine_cnt[0, pl.ds(m, 1), :] = jnp.where(
+        migrate, r_sup,
+        jnp.where(is_upd, jnp.where(can, old_mcnt + 1, s_sup + 1),
+                  old_mcnt_row))
+    o_mine_fill[0, 0] = fill + migrate.astype(i32)
+    o_ts[0, 0] = ts + en.astype(i32)
+
+
+def record_step_kernel(block: jax.Array, enabled: jax.Array,
+                       rec_key: jax.Array, rec_ts_flat: jax.Array,
+                       rec_cnt: jax.Array, rec_age: jax.Array,
+                       rec_loc: jax.Array, rec_row: jax.Array,
+                       mine_block: jax.Array, mine_ts: jax.Array,
+                       mine_cnt: jax.Array, mine_fill: jax.Array,
+                       ts: jax.Array, *,
+                       interpret: Optional[bool] = None):
+    """One fused record event for every lane.
+
+    ``block``/``enabled``/``mine_fill``/``ts``: (L, 1) int32;
+    ``rec_key/cnt/age/loc/row``: (L, NB, W); ``rec_ts_flat``:
+    (L, NB*W, R); ``mine_block/cnt``: (L, Nm, 1); ``mine_ts``:
+    (L, Nm, S). Returns the 11 updated state arrays in the same order
+    and layout (``ops.mithril_record_fused`` adapts ``MithrilState``).
+    ``interpret=None``: compiled on TPU, interpreted elsewhere.
+    """
+    interpret = default_interpret(interpret)
+    lanes, nb, ways = rec_key.shape
+    r_sup = rec_ts_flat.shape[-1]
+    nm, s_sup = mine_ts.shape[1:]
+    kernel = functools.partial(_record_kernel, n_buckets=nb, ways=ways,
+                               r_sup=r_sup, s_sup=s_sup)
+
+    spec2 = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    spec_rec = pl.BlockSpec((1, nb, ways), lambda i: (i, 0, 0))
+    spec_ts = pl.BlockSpec((1, nb * ways, r_sup), lambda i: (i, 0, 0))
+    spec_mblk = pl.BlockSpec((1, nm, 1), lambda i: (i, 0, 0))
+    spec_mts = pl.BlockSpec((1, nm, s_sup), lambda i: (i, 0, 0))
+
+    sds = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    return pl.pallas_call(
+        kernel,
+        grid=(lanes,),
+        in_specs=[spec2, spec2, spec_rec, spec_ts, spec_rec, spec_rec,
+                  spec_rec, spec_rec, spec_mblk, spec_mts, spec_mblk,
+                  spec2, spec2],
+        out_specs=[spec_rec, spec_ts, spec_rec, spec_rec, spec_rec,
+                   spec_rec, spec_mblk, spec_mts, spec_mblk, spec2, spec2],
+        out_shape=[sds((lanes, nb, ways), i32),
+                   sds((lanes, nb * ways, r_sup), i32),
+                   sds((lanes, nb, ways), i32),
+                   sds((lanes, nb, ways), i32),
+                   sds((lanes, nb, ways), i32),
+                   sds((lanes, nb, ways), i32),
+                   sds((lanes, nm, 1), i32),
+                   sds((lanes, nm, s_sup), i32),
+                   sds((lanes, nm, 1), i32),
+                   sds((lanes, 1), i32),
+                   sds((lanes, 1), i32)],
+        # state arrays update in place: input i+2 -> output i
+        input_output_aliases={i + 2: i for i in range(11)},
+        interpret=interpret,
+    )(block, enabled, rec_key, rec_ts_flat, rec_cnt, rec_age, rec_loc,
+      rec_row, mine_block, mine_ts, mine_cnt, mine_fill, ts)

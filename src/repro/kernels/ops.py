@@ -17,6 +17,7 @@ from .backend import default_interpret
 from .hash_lookup import hash_lookup_kernel
 from .mithril_mine import pairwise_codes_kernel
 from .mithril_mine_batched import pairwise_codes_batched_kernel
+from .mithril_record import record_step_kernel
 from .paged_decode import paged_decode_kernel
 
 
@@ -68,6 +69,46 @@ def mithril_pairwise_batched(ts: jax.Array, cnt: jax.Array, valid: jax.Array,
     out = pairwise_codes_batched_kernel(ts_p, cnt_p, val_p, delta, window,
                                         blk=blk, interpret=default_interpret())
     return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mithril_record_fused(states, blocks: jax.Array, enabled: jax.Array,
+                         interpret=None):
+    """Fused per-request record path over a lanes axis (DESIGN.md §11).
+
+    Drop-in for ``vmap(core.mithril.record_event)``: ``states`` is a
+    stacked ``MithrilState`` with a leading ``(B,)`` lanes axis,
+    ``blocks``/``enabled`` are ``(B,)``. One kernel launch covers the
+    locate probe, the recording-table stamp and the mining-table insert
+    for every lane; prefetch-table leaves and mining counters pass
+    through untouched (``record_event`` never writes them). The sweep
+    engine selects this on TPU via ``sweep._batched_record_fn`` and
+    falls back to the pure-jnp scatter form elsewhere — bit-identical
+    either way (``tests/test_record_kernel.py``).
+    """
+    lanes, nb, ways = states.rec_key.shape
+    r_sup = states.rec_ts.shape[-1]
+    i32 = jnp.int32
+    outs = record_step_kernel(
+        blocks.astype(i32).reshape(lanes, 1),
+        jnp.asarray(enabled).astype(i32).reshape(lanes, 1),
+        states.rec_key,
+        states.rec_ts.reshape(lanes, nb * ways, r_sup),
+        states.rec_cnt, states.rec_age, states.rec_loc, states.rec_row,
+        states.mine_block[..., None], states.mine_ts,
+        states.mine_cnt[..., None],
+        states.mine_fill.reshape(lanes, 1),
+        states.ts.reshape(lanes, 1),
+        interpret=default_interpret(interpret))
+    (rec_key, rec_ts, rec_cnt, rec_age, rec_loc, rec_row,
+     mine_block, mine_ts, mine_cnt, mine_fill, ts) = outs
+    return states._replace(
+        rec_key=rec_key,
+        rec_ts=rec_ts.reshape(lanes, nb, ways, r_sup),
+        rec_cnt=rec_cnt, rec_age=rec_age, rec_loc=rec_loc, rec_row=rec_row,
+        mine_block=mine_block[..., 0], mine_ts=mine_ts,
+        mine_cnt=mine_cnt[..., 0],
+        mine_fill=mine_fill.reshape(lanes), ts=ts.reshape(lanes))
 
 
 @jax.jit

@@ -1,5 +1,9 @@
-from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze_cell,
-                       model_flops, save_roofline)
+from .analysis import (HBM_BW, ICI_BW, PEAK_FLOPS, KERNEL_MODELS,
+                       KernelRoofline, MachinePeaks, Roofline, analyze_cell,
+                       analyze_kernel, machine_peaks, model_flops,
+                       save_roofline)
 
-__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Roofline", "analyze_cell",
-           "model_flops", "save_roofline"]
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "KERNEL_MODELS",
+           "KernelRoofline", "MachinePeaks", "Roofline", "analyze_cell",
+           "analyze_kernel", "machine_peaks", "model_flops",
+           "save_roofline"]

@@ -311,3 +311,131 @@ def save_roofline(rl: Roofline, out_dir: str = "results/roofline"):
     with open(os.path.join(
             out_dir, f"{rl.arch}_{rl.shape}_{rl.mesh}.json"), "w") as f:
         json.dump(rl.to_dict(), f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# per-kernel roofline (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# The model-level roofline above prices whole training/serving steps from
+# compiled-HLO cost analysis; the per-kernel analyzer below prices the
+# individual Pallas launches of the MITHRIL request path from their
+# BlockSpec geometry instead. Bytes moved is the HBM<->VMEM traffic the
+# BlockSpec layout implies (every block a launch reads in + writes out,
+# i.e. the copy-through upper bound for aliased in-place kernels — a
+# kernel can touch fewer bytes, never more). Flops counts the integer
+# compare/select lattice (int ops ~ flops on the VPU). Machine peaks
+# come from ``machine_peaks``: the TPU numbers are the trusted v5e
+# datasheet constants used by the model roofline; any other backend
+# gets finite nominal placeholders flagged ``trusted=False`` so CI on
+# CPU can still round-trip the report without gating on made-up peaks.
+# Interpreted-mode wall-clock never enters these numbers (DESIGN.md §11).
+
+_NOMINAL_FLOPS = 1e12    # untrusted placeholder peaks for cpu/gpu/unknown
+_NOMINAL_BW = 100e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MachinePeaks:
+    backend: str
+    flops_per_s: float
+    bytes_per_s: float
+    trusted: bool
+
+
+def machine_peaks(backend: Optional[str] = None) -> MachinePeaks:
+    """Peak flops/bandwidth for ``backend`` (default: the live backend).
+
+    Never raises: unknown backends fall back to finite nominal peaks
+    with ``trusted=False`` so reports stay well-formed everywhere and
+    only TPU numbers are presented as machine-true.
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    if backend == "tpu":
+        return MachinePeaks("tpu", PEAK_FLOPS, HBM_BW, True)
+    return MachinePeaks(str(backend), _NOMINAL_FLOPS, _NOMINAL_BW, False)
+
+
+def _record_fused_cost(g: dict):
+    """One ``mithril_record_fused`` launch: every lane's record + mining
+    tables stream through VMEM once in, once out (the copy-through
+    bound), plus the scalar lane blocks; compute is the W-way probe,
+    R-slot stamp and S-slot insert select lattice."""
+    lanes, nb, w = g["lanes"], g["n_buckets"], g["ways"]
+    r, nm, s = g["r_sup"], g["mine_rows"], g["s_sup"]
+    table_words = nb * w * (5 + r) + nm * (2 + s)
+    bytes_ = lanes * (2 * table_words + 6) * 4
+    flops = lanes * (16 + 8 * w + 6 * r + 8 * s)
+    return float(bytes_), float(flops)
+
+
+def _mine_batched_cost(g: dict):
+    """One ``mithril_pairwise_batched`` mining barrier: the sorted
+    mining table in + candidate pairs out per lane; compute is the
+    window*S*S timestamp-closeness compare grid per row."""
+    lanes = g.get("lanes", 1)
+    n, s, window = g["mine_rows"], g["s_sup"], g["window"]
+    bytes_ = lanes * (n * s + 2 * n + n * window) * 4 * 2
+    flops = lanes * n * window * s * 3
+    return float(bytes_), float(flops)
+
+
+def _paged_decode_cost(g: dict):
+    """One ``paged_decode`` step: the whole paged KV working set is
+    read once (decode is bandwidth-bound), q in / o out; compute is the
+    two matmuls over the gathered pages."""
+    b, hq, hkv = g["batch"], g["heads_q"], g["heads_kv"]
+    hd, ps, npg = g["head_dim"], g["page_size"], g["n_pages"]
+    bytes_ = (2 * b * npg * ps * hkv * hd + 2 * b * hq * hd) * 4
+    flops = 4.0 * b * hq * npg * ps * hd
+    return float(bytes_), float(flops)
+
+
+#: kernel name -> cost fn(geometry dict) -> (bytes_moved, flops).
+#: Names match the ``ops``/BENCH-json kernel labels.
+KERNEL_MODELS = {
+    "mithril_record_fused": _record_fused_cost,
+    "mithril_mine_batched": _mine_batched_cost,
+    "paged_decode": _paged_decode_cost,
+}
+
+
+@dataclasses.dataclass
+class KernelRoofline:
+    kernel: str
+    geometry: dict
+    backend: str
+    bytes_moved: float
+    flops: float
+    peak_flops: float
+    peak_bw: float
+    trusted_peaks: bool
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity, flops per byte moved."""
+        return self.flops / self.bytes_moved
+
+    @property
+    def peak_fraction(self) -> float:
+        """Attainable fraction of machine peak flops at this intensity
+        (1.0 when compute-bound: the memory roofline does not bind)."""
+        return min(1.0, self.intensity * self.peak_bw / self.peak_flops)
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "intensity": self.intensity,
+                "peak_fraction": self.peak_fraction}
+
+
+def analyze_kernel(name: str, geometry: dict,
+                   backend: Optional[str] = None) -> KernelRoofline:
+    """Per-kernel roofline point for one launch geometry."""
+    peaks = machine_peaks(backend)
+    bytes_, flops = KERNEL_MODELS[name](dict(geometry))
+    return KernelRoofline(
+        kernel=name, geometry=dict(geometry), backend=peaks.backend,
+        bytes_moved=bytes_, flops=flops,
+        peak_flops=peaks.flops_per_s, peak_bw=peaks.bytes_per_s,
+        trusted_peaks=peaks.trusted)

@@ -1,0 +1,119 @@
+"""Fused record kernel vs the scatter-form oracle (frozen per PR 3).
+
+The ISSUE 7 tentpole contract: ``kernels.mithril_record.record_step_kernel``
+(via ``ops.mithril_record_fused``, interpret mode here) is bit-identical,
+per event and per state leaf, to ``jax.vmap(core.mithril.record_event)``
+— the scatter form that ``tests/test_record_scatter.py`` pins against
+the original ``lax.switch`` reference. Property tests drive both over
+random multi-lane traces with mixed ``enabled`` masks, including the
+``min_support == 1`` immediate-migrate branch and the ``enabled=False``
+bit-exact no-op, draining the mining table out-of-band (like ``mine``)
+whenever it fills so the ``mine_fill < mine_rows`` record-path
+invariant holds without involving the mining procedure.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MithrilConfig, init_state, record_event,
+                        record_event_batched)
+from repro.core.hashindex import EMPTY
+from repro.kernels.ops import mithril_record_fused
+
+
+def small_cfg(**kw):
+    base = dict(min_support=2, max_support=4, lookahead=8, rec_buckets=16,
+                rec_ways=2, mine_rows=8, pf_buckets=16, pf_ways=2,
+                prefetch_list=2)
+    base.update(kw)
+    return MithrilConfig(**base)
+
+
+def assert_trees_equal(a, b, msg=""):
+    for (pa, xa), (pb, xb) in zip(jax.tree_util.tree_leaves_with_path(a),
+                                  jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_array_equal(
+            np.asarray(xa), np.asarray(xb),
+            err_msg=f"{msg} leaf {jax.tree_util.keystr(pa)}")
+
+
+_CFGS = {name: small_cfg(min_support=r) for name, r in
+         [("r2", 2), ("r1", 1)]}
+LANES = 2
+
+# small block universe so probes collide, victims evict, tables refill
+BLOCKS = st.lists(st.integers(0, 40), min_size=1, max_size=40)
+
+
+def _drain(states):
+    """Out-of-band mining-table drain (what ``mine`` does to the record
+    path), applied identically to both sides to keep the invariant."""
+    def one(s):
+        return s._replace(
+            rec_key=jnp.where(s.rec_loc == 1, EMPTY, s.rec_key),
+            rec_loc=jnp.zeros_like(s.rec_loc),
+            mine_block=jnp.full_like(s.mine_block, EMPTY),
+            mine_ts=jnp.zeros_like(s.mine_ts),
+            mine_cnt=jnp.zeros_like(s.mine_cnt),
+            mine_fill=jnp.zeros_like(s.mine_fill))
+    return jax.vmap(one)(states)
+
+
+@settings(max_examples=5, deadline=None)
+@given(BLOCKS, st.integers(0, 2**31 - 1))
+def test_fused_record_matches_scatter_per_event(blocks, seed):
+    """Per-event, per-leaf bit-equivalence over mixed-enable lanes."""
+    rng = np.random.default_rng(seed)
+    arr = np.asarray(blocks, np.int32)
+    # decorrelated per-lane streams from one drawn trace
+    blk_mat = np.stack([(arr + 7 * lane) % 41 for lane in range(LANES)], 1)
+    en_mat = rng.integers(0, 2, size=blk_mat.shape).astype(bool)
+    for name, cfg in _CFGS.items():
+        init = jax.vmap(lambda _: init_state(cfg))(jnp.arange(LANES))
+        oracle, fused = init, init
+        for t in range(blk_mat.shape[0]):
+            b = jnp.asarray(blk_mat[t])
+            e = jnp.asarray(en_mat[t])
+            oracle = record_event_batched(cfg, oracle, b, e)
+            fused = mithril_record_fused(fused, b, e, interpret=True)
+            assert_trees_equal(fused, oracle, f"cfg={name} event {t}")
+            if int(jnp.max(oracle.mine_fill)) >= cfg.mine_rows - 1:
+                oracle = _drain(oracle)
+                fused = _drain(fused)
+
+
+@settings(max_examples=5, deadline=None)
+@given(BLOCKS)
+def test_fused_record_disabled_is_noop(blocks):
+    """All-lanes-disabled launch returns every leaf bit-unchanged."""
+    cfg = _CFGS["r2"]
+    states = jax.vmap(lambda _: init_state(cfg))(jnp.arange(LANES))
+    # warm the tables first so the no-op check sees non-trivial state
+    for blk in blocks[:10]:
+        b = jnp.full((LANES,), blk, jnp.int32)
+        states = record_event_batched(cfg, states, b,
+                                      jnp.ones((LANES,), bool))
+    for blk in blocks:
+        b = jnp.full((LANES,), blk, jnp.int32)
+        frozen = mithril_record_fused(states, b, jnp.zeros((LANES,), bool),
+                                      interpret=True)
+        assert_trees_equal(frozen, states,
+                           f"enabled=False mutated state on block {blk}")
+
+
+def test_record_event_batched_default_is_vmap_scatter():
+    """Without ``fused_fn`` the batched entry point IS the vmapped
+    scatter form — the off-TPU dispatch leg of the kernels table."""
+    cfg = _CFGS["r2"]
+    states = jax.vmap(lambda _: init_state(cfg))(jnp.arange(LANES))
+    rng = np.random.default_rng(3)
+    for blk in rng.integers(0, 40, size=30):
+        b = jnp.asarray(rng.integers(0, 40, size=LANES).astype(np.int32))
+        e = jnp.asarray(rng.integers(0, 2, size=LANES).astype(bool))
+        got = record_event_batched(cfg, states, b, e)
+        want = jax.vmap(
+            lambda s, bb, ee: record_event(cfg, s, bb, ee))(states, b, e)
+        assert_trees_equal(got, want, f"block {b}")
+        states = got

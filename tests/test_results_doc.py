@@ -68,6 +68,7 @@ def test_results_md_commands_parse_via_driver_argparsers():
                      "benchmarks.fig7_params",
                      "benchmarks.fig9_midfreq",
                      "benchmarks.corpus_sweep",
+                     "benchmarks.kernel_micro",
                      "benchmarks.run"):
         assert required in seen_modules, \
             f"RESULTS.md documents no command for {required}"
