@@ -1,0 +1,152 @@
+"""Online-adaptation benchmark: per-trace search vs best-static (§12).
+
+The adaptive lane (``repro.learn.adapt``) tunes MITHRIL's
+``(lookahead, min_support, prefetch_list)`` axis *per trace online*:
+episodes replay growing trace prefixes under candidate configurations
+through the batched sweep engine and commit the winner. This driver
+runs both searchers — per-trace hill-climb and the fixed-seed
+epsilon-greedy bandit — over the corpus registry slice, then evaluates
+every grid arm at full length to build the *best-static* reference
+(the single strongest configuration per workload family, i.e. what a
+perfectly tuned offline deployment would pick), and reports
+adaptive-vs-static per family.
+
+Everything but wall-clock is deterministic given (corpus, grid, seed):
+the committed arms, per-trace hit ratios and the decision-history CRC
+land in the BENCH json ``"learned"`` section and are FAIL-gated by
+``benchmarks.compare``.
+
+    PYTHONPATH=src python -m benchmarks.adaptive_bench --scale quick
+"""
+
+from __future__ import annotations
+
+import time
+import zlib
+
+import numpy as np
+
+from repro.learn import SearchGrid, arm_label, bandit, hill_climb
+
+from .common import record_learned, write_csv
+from .corpus_figures import corpus_run, figure_parser, write_family_csv
+
+# compact declared grid (12 arms) so the quick suite stays
+# CI-affordable; the axes still straddle the paper defaults
+# (lookahead 100, min_support 2, prefetch_list 2)
+GRID = SearchGrid(lookaheads=(25, 100, 400), min_supports=(2, 4),
+                  pf_sizes=(1, 2))
+BASE = "mithril-lru"
+EPISODES = 8            # bandit pulls per trace
+SEED = 0
+TOP_K = 4               # bandit finalists re-scored at full length
+
+
+def _crc(history) -> str:
+    """CRC32 of the full decision history — one reproducibility token
+    per run, cheap to gate exactly in BENCH json."""
+    return f"{zlib.crc32(repr(history).encode()):08x}"
+
+
+def main(scale: str = "quick", trace_len: int | None = None):
+    run = corpus_run(scale, trace_len)
+    base_cfg = run.config(BASE)
+    job = f"adaptive_{scale}"
+
+    searchers = {
+        "hill-climb": lambda: hill_climb(base_cfg, run.blocks,
+                                         run.lengths, GRID),
+        "bandit": lambda: bandit(base_cfg, run.blocks, run.lengths, GRID,
+                                 episodes=EPISODES, seed=SEED,
+                                 top_k=TOP_K),
+    }
+    results = {}
+    for name, fn in searchers.items():
+        t0 = time.time()
+        r = results[name] = fn()
+        record_learned(job, name, {
+            "scale": scale,
+            "episodes": int(r.episodes),
+            "arms": [int(a) for a in r.arms],
+            "labels": list(r.labels),
+            "hit_ratios": [round(float(h), 6) for h in r.hit_ratios],
+            "base_hit_ratios": [round(float(h), 6)
+                                for h in r.base_hit_ratios],
+            "hit_ratio_mean": round(float(np.mean(r.hit_ratios)), 6),
+            "base_hit_ratio_mean": round(
+                float(np.mean(r.base_hit_ratios)), 6),
+            "decisions_crc": _crc(r.history),
+            "compiles": int(r.compiles),
+            "seconds": round(time.time() - t0, 3),
+        })
+
+    # best-static reference: every grid arm at full length, through the
+    # shared figure engine (memoized + recorded like fig7's grid)
+    arm_hr = {}
+    for a in range(GRID.n_arms):
+        cfg = GRID.config(base_cfg, a)
+        res = run.extra_result(cfg, f"{BASE}@{arm_label(GRID, a)}", job)
+        arm_hr[a] = res.hit_ratios()
+
+    fams = np.asarray(run.families)
+    best_static = np.empty(run.n_traces)
+    best_arm = {}
+    for fam in sorted(set(fams.tolist())):
+        m = fams == fam
+        means = {a: float(hr[m].mean()) for a, hr in arm_hr.items()}
+        best_arm[fam] = min(means, key=lambda a: (-means[a], a))
+        best_static[m] = arm_hr[best_arm[fam]][m]
+
+    hill, band = results["hill-climb"], results["bandit"]
+    rows = [[run.names[t], fams[t],
+             round(float(hill.base_hit_ratios[t]), 6),
+             hill.labels[t], round(float(hill.hit_ratios[t]), 6),
+             band.labels[t], round(float(band.hit_ratios[t]), 6),
+             arm_label(GRID, best_arm[fams[t]]),
+             round(float(best_static[t]), 6)]
+            for t in range(run.n_traces)]
+    write_csv(f"adaptive_{scale}.csv",
+              "trace,family,static_hr,hill_arm,hill_hr,bandit_arm,"
+              "bandit_hr,family_best_arm,family_best_hr", rows)
+    write_family_csv(f"adaptive_{scale}_by_family.csv", run.families, {
+        "static": hill.base_hit_ratios,
+        "hill_climb": hill.hit_ratios,
+        "bandit": band.hit_ratios,
+        "family_best_static": best_static,
+    })
+
+    # acceptance claims (recorded, not asserted fatally, like table1):
+    # the commit guard makes per-trace >= static exact; "matches" the
+    # per-family best-static mean means within MATCH_TOL (0.1pp) — an
+    # online searcher can't replay the full trace under every arm, so
+    # hairline family-mean deficits vs the offline exhaustive pick
+    # still count as a match
+    match_tol = 1e-3
+    checks = {}
+    for name, r in results.items():
+        ok = all(float(np.asarray(r.hit_ratios)[fams == fam].mean())
+                 >= float(best_static[fams == fam].mean()) - match_tol
+                 for fam in best_arm)
+        checks[f"{name}_matches_family_best_static"] = ok
+        checks[f"{name}_geq_static_base"] = bool(
+            np.all(np.asarray(r.hit_ratios)
+                   >= np.asarray(r.base_hit_ratios) - 1e-9))
+    write_csv(f"adaptive_{scale}_claims.csv", "claim,holds",
+              [[k, v] for k, v in checks.items()])
+
+    summary = (f"hill={float(np.mean(hill.hit_ratios)):.4f} "
+               f"bandit={float(np.mean(band.hit_ratios)):.4f} "
+               f"static={float(np.mean(hill.base_hit_ratios)):.4f} "
+               f"best_static={float(best_static.mean()):.4f}")
+    print(f"  [adaptive] {summary} claims=" +
+          ",".join(f"{k}:{int(v)}" for k, v in checks.items()))
+    return summary
+
+
+def _parser():
+    return figure_parser(__doc__)
+
+
+if __name__ == "__main__":
+    a = _parser().parse_args()
+    main(a.scale, a.trace_len)

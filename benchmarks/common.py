@@ -37,6 +37,9 @@ def configs(capacity: int = CAPACITY) -> Dict[str, SimConfig]:
                   mithril=SUITE_MITHRIL),
         SimConfig(capacity=capacity, use_amp=True, use_mithril=True,
                   mithril=SUITE_MITHRIL),
+        SimConfig(capacity=capacity, use_learned=True),
+        SimConfig(capacity=capacity, use_learned=True, use_mithril=True,
+                  mithril=SUITE_MITHRIL),
     ]
     return {cfg.label(): cfg for cfg in grid}
 
@@ -59,6 +62,7 @@ _TELEMETRY: List[dict] = []
 _PACKER: List[dict] = []
 _SERVING: List[dict] = []
 _KERNELS: List[dict] = []
+_LEARNED: List[dict] = []
 
 
 def record_sweep(job: str, config: str, cfg: SimConfig,
@@ -166,6 +170,26 @@ def kernels_telemetry() -> List[dict]:
     return list(_KERNELS)
 
 
+def record_learned(job: str, config: str, entry: Dict) -> None:
+    """Log one adaptive-search run (``repro.learn.adapt``) for BENCH json.
+
+    Everything except ``seconds`` is a pure function of (corpus, grid,
+    seed) — committed arms, per-trace hit ratios, the decision-history
+    CRC — so ``benchmarks.compare`` FAIL-gates those like hit ratios;
+    wall-clock only WARNs.
+    """
+    entry = {"job": job, "config": config, **entry}
+    _LEARNED.append(entry)
+    print(f"  [{job}] {config:<12} hit={entry['hit_ratio_mean']:.4f} "
+          f"static={entry['base_hit_ratio_mean']:.4f} "
+          f"episodes={entry['episodes']} compiles={entry['compiles']} "
+          f"crc={entry['decisions_crc']}")
+
+
+def learned_telemetry() -> List[dict]:
+    return list(_LEARNED)
+
+
 def write_bench_json(meta: dict, jobs: List[dict]) -> str:
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, "BENCH_sweep.json")
@@ -174,7 +198,8 @@ def write_bench_json(meta: dict, jobs: List[dict]) -> str:
                    "sweeps": sweep_telemetry(),
                    "packer": packer_telemetry(),
                    "serving": serving_telemetry(),
-                   "kernels": kernels_telemetry()}, f, indent=2)
+                   "kernels": kernels_telemetry(),
+                   "learned": learned_telemetry()}, f, indent=2)
     print(f"wrote {path}")
     return path
 

@@ -34,7 +34,15 @@ Policy (make CI *compare* trajectories, not just archive them):
   mismatch, and the roofline bytes-moved model is pure arithmetic over
   the launch geometry, so any bytes regression vs the baseline FAILS
   (improvements are noted); interpret-mode kernel wall-clock only
-  WARNs past ``--wallclock-warn`` at the same geometry.
+  WARNs past ``--wallclock-warn`` at the same geometry;
+* learned & adaptive lane (ISSUE 8): an adaptive-search run is a pure
+  function of (corpus, grid, seed) — committed arms, per-trace hit
+  ratios and the decision-history CRC all FAIL on drift; wall-clock
+  only WARNs;
+* schema skew is never a crash: a baseline that predates a whole
+  section (e.g. ``BENCH_baseline_mid`` without ``"learned"``) or an
+  entry field WARNs and skips that comparison — the next baseline
+  refresh starts gating it.
 
 Refresh a geometry's baseline by copying a trusted run of that suite:
 
@@ -59,6 +67,26 @@ def _key(sweep: dict) -> tuple:
 
 def _index(doc: dict) -> dict:
     return {_key(s): s for s in doc.get("sweeps", [])}
+
+
+def _baseline_section(baseline: dict, fresh: dict, name: str,
+                      warnings: list) -> list:
+    """A baseline telemetry section, tolerating older schemas.
+
+    When the baseline predates the section entirely (e.g. a
+    ``BENCH_baseline_mid`` seeded before the ``"learned"`` section
+    existed) the fresh entries can't be gated — WARN once and skip
+    rather than KeyError, so adding a section never breaks CI against
+    old baselines; the next baseline refresh starts gating it.
+    """
+    if name in baseline:
+        return baseline.get(name) or []
+    if fresh.get(name):
+        warnings.append(
+            f"baseline has no '{name}' section (older schema) — "
+            f"{len(fresh[name])} fresh entrie(s) unchecked; refresh "
+            "the baseline to start gating them")
+    return []
 
 
 def compare(fresh: dict, baseline: dict, wallclock_warn: float):
@@ -97,7 +125,10 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
             failures.append(
                 f"{key}: hit-ratio drift on {len(drift)} trace(s), e.g. "
                 f"trace {i}: baseline={b:.6f} fresh={g:.6f}")
-        if got["compiles"] > max(base["compiles"], 1):
+        if base.get("compiles") is None:
+            warnings.append(f"{key}: baseline entry has no 'compiles' "
+                            "(older schema) — compile count unchecked")
+        elif got["compiles"] > max(base["compiles"], 1):
             failures.append(
                 f"{key}: compile count regressed "
                 f"{base['compiles']} -> {got['compiles']}")
@@ -115,7 +146,8 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     same_devices = (fresh_meta.get("n_devices") is not None
                     and fresh_meta.get("n_devices")
                     == base_meta.get("n_devices"))
-    base_pk = {p["job"]: p for p in baseline.get("packer", [])}
+    base_pk = {p["job"]: p for p in
+               _baseline_section(baseline, fresh, "packer", warnings)}
     for p in fresh.get("packer", []):
         b = base_pk.get(p["job"])
         if b is None:
@@ -128,7 +160,10 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
             notes.append(f"packer {p['job']}: geometry/devices differ, "
                          "waste ratio not compared")
             continue
-        if p["waste_ratio"] > b["waste_ratio"] + HIT_TOL:
+        if b.get("waste_ratio") is None:
+            warnings.append(f"packer {p['job']}: baseline entry has no "
+                            "'waste_ratio' (older schema) — unchecked")
+        elif p["waste_ratio"] > b["waste_ratio"] + HIT_TOL:
             failures.append(
                 f"packer {p['job']}: padded-waste ratio regressed "
                 f"{b['waste_ratio']:.6f} -> {p['waste_ratio']:.6f}")
@@ -143,7 +178,8 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
                 "turnaround_steps_p50", "turnaround_steps_p95",
                 "turnaround_steps_p99", "tier")
     base_sv = {(s["job"], s["config"]): s
-               for s in baseline.get("serving", [])}
+               for s in _baseline_section(baseline, fresh, "serving",
+                                          warnings)}
     for s in fresh.get("serving", []):
         key = (s["job"], s["config"])
         b = base_sv.get(key)
@@ -177,7 +213,8 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     # increase is a layout/blocking change that must be intentional;
     # interpret-mode wall-clock only WARNs, like sweep wall-clock
     base_kn = {(k["kernel"], k["shape"]): k
-               for k in baseline.get("kernels", [])}
+               for k in _baseline_section(baseline, fresh, "kernels",
+                                          warnings)}
     for k in fresh.get("kernels", []):
         key = (k["kernel"], k["shape"])
         if not k.get("matches_oracle", True):
@@ -189,7 +226,10 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
             continue
         if not base_ix:     # geometry mismatch cleared the comparison
             continue
-        if k["bytes_moved"] > b["bytes_moved"] + HIT_TOL:
+        if b.get("bytes_moved") is None:
+            warnings.append(f"kernel {key}: baseline entry has no "
+                            "'bytes_moved' (older schema) — unchecked")
+        elif k["bytes_moved"] > b["bytes_moved"] + HIT_TOL:
             failures.append(
                 f"kernel {key}: bytes moved regressed "
                 f"{b['bytes_moved']:.0f} -> {k['bytes_moved']:.0f}")
@@ -210,6 +250,46 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
                                  for k in fresh.get("kernels", [])}:
         if base_ix:
             failures.append(f"kernel {key}: missing from fresh run")
+
+    # learned & adaptive lane (ISSUE 8): an adaptive run's committed
+    # arms, per-trace hit ratios and decision-history CRC are a pure
+    # function of (corpus, grid, seed) — drift FAILS like hit ratios;
+    # only wall-clock ('seconds') WARNs
+    det_ln = ("episodes", "arms", "labels", "hit_ratios",
+              "base_hit_ratios", "decisions_crc")
+    base_ln = {(s["job"], s["config"]): s
+               for s in _baseline_section(baseline, fresh, "learned",
+                                          warnings)}
+    for s in fresh.get("learned", []):
+        key = (s["job"], s["config"])
+        b = base_ln.get(key)
+        if b is None:
+            if base_ln:
+                notes.append(f"learned {key}: not in baseline "
+                             "(new adaptive run, unchecked)")
+            continue
+        if not base_ix:     # geometry mismatch cleared the comparison
+            continue
+        for k in det_ln:
+            if k not in b:
+                warnings.append(f"learned {key}: baseline entry has no "
+                                f"'{k}' (older schema) — unchecked")
+            elif s.get(k) != b[k]:
+                failures.append(
+                    f"learned {key}: deterministic field '{k}' drifted "
+                    f"{b[k]} -> {s.get(k)}")
+        if b.get("seconds", 0) > 0 and (
+                s.get("seconds", 0)
+                > b["seconds"] * (1 + wallclock_warn)):
+            warnings.append(
+                f"learned {key}: wall-clock {b['seconds']:.2f}s -> "
+                f"{s['seconds']:.2f}s "
+                f"(+{100 * (s['seconds'] / b['seconds'] - 1):.0f}%)")
+
+    for key in base_ln.keys() - {(s["job"], s["config"])
+                                 for s in fresh.get("learned", [])}:
+        if base_ix:
+            failures.append(f"learned {key}: missing from fresh run")
 
     failed_jobs = [j for j in fresh.get("jobs", [])
                    if j.get("status") != "ok"]

@@ -55,11 +55,11 @@ def main(argv=None) -> None:
     geo = SUITES[suite]
     scale, tlen = geo["corpus_scale"], geo["trace_len"]
 
-    from . import (common, corpus_figures, corpus_sweep, expert_prefetch,
-                   fig5_representative, fig6_hrc_precision, fig7_params,
-                   fig8_latency, fig9_midfreq, fig34_trace_sweep,
-                   kernel_micro, serving_bench, table1_hit_ratio,
-                   tiered_serving)
+    from . import (adaptive_bench, common, corpus_figures, corpus_sweep,
+                   expert_prefetch, fig5_representative,
+                   fig6_hrc_precision, fig7_params, fig8_latency,
+                   fig9_midfreq, fig34_trace_sweep, kernel_micro,
+                   serving_bench, table1_hit_ratio, tiered_serving)
 
     clen = corpus_figures.DEFAULT_LEN[scale]
 
@@ -74,6 +74,7 @@ def main(argv=None) -> None:
         ("fig8_latency", lambda: fig8_latency.main(tlen)),
         ("fig9_midfreq", lambda: fig9_midfreq.main(scale, clen)),
         ("corpus_sweep", lambda: corpus_sweep.main(scale, clen)),
+        ("adaptive_bench", lambda: adaptive_bench.main(scale, clen)),
         ("tiered_serving", tiered_serving.main),
         ("serving_bench", lambda: serving_bench.main(scale)),
         ("expert_prefetch", expert_prefetch.main),

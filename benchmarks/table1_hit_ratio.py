@@ -19,7 +19,8 @@ from .common import write_csv
 from .corpus_figures import (IMPROVEMENT_HEADER, corpus_run, figure_parser,
                              improvement_summary, write_family_csv)
 
-NAMES = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp-lru"]
+NAMES = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp-lru",
+         "learned-lru", "learned-mithril-lru"]
 
 
 def main(scale: str = "quick", trace_len: int | None = None):
@@ -41,6 +42,11 @@ def main(scale: str = "quick", trace_len: int | None = None):
         "mithril_beats_pg_avg": rel["mithril-lru"] > rel["pg-lru"],
         "mithril_beats_amp_avg": rel["mithril-lru"] > rel["amp-lru"],
         "mithril_amp_geq_amp": rel["mithril-amp-lru"] >= rel["amp-lru"],
+        # learned lane (DESIGN.md §12): the learned eviction baseline
+        # should not collapse below plain LRU, and stacking it under
+        # MITHRIL should keep the prefetcher's gains
+        "learned_lru_geq_lru": rel["learned-lru"] >= -0.01,
+        "learned_mithril_geq_lru": rel["learned-mithril-lru"] > 0.0,
     }
     write_csv("table1_claims.csv", "claim,holds",
               [[k, v] for k, v in checks.items()])

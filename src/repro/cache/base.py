@@ -10,6 +10,16 @@ Policies: ``lru`` (stamp = last access) and ``fifo`` (stamp = insert time).
 Prefetched blocks carry a flag for (a) precision accounting and (b) the
 paper's second-chance rule: an unused prefetched block that would be
 evicted is instead refreshed to MRU once (Sec. 4.2.2).
+
+Learned eviction (DESIGN.md §12) plugs in through the optional ``scorer``
+argument of :func:`access` / :func:`insert_prefetch`: a pure function of
+the per-way feature rows (recency, frequency, association hint, prefetch
+flag) returning a keep-score per way. When given, the victim is the
+minimum-score way instead of the minimum-stamp way; everything else —
+second chance, the one-row-write-per-table scatter form, the
+``enabled=False`` bit-exact no-op — is unchanged. The feature tables
+(``freq``, ``assoc``) are maintained for every policy so that switching
+the scorer on never changes the carry structure.
 """
 
 from __future__ import annotations
@@ -32,6 +42,8 @@ class CacheState(NamedTuple):
     pf_flag: jax.Array  # (NB, W) int32 1 = prefetched & not yet used
     pf_sc: jax.Array    # (NB, W) int32 1 = second chance consumed
     pf_src: jax.Array   # (NB, W) int32 which prefetcher inserted it
+    freq: jax.Array     # (NB, W) int32 accesses while resident (learned feat.)
+    assoc: jax.Array    # (NB, W) int32 association-count hint at insert time
     clock: jax.Array    # () int32
 
 
@@ -50,7 +62,8 @@ def init_cache(capacity: int, ways: int = 16) -> CacheState:
     return CacheState(
         key=jnp.full(shape, EMPTY, i32), stamp=jnp.zeros(shape, i32),
         pf_flag=jnp.zeros(shape, i32), pf_sc=jnp.zeros(shape, i32),
-        pf_src=jnp.zeros(shape, i32), clock=jnp.zeros((), i32))
+        pf_src=jnp.zeros(shape, i32), freq=jnp.zeros(shape, i32),
+        assoc=jnp.zeros(shape, i32), clock=jnp.zeros((), i32))
 
 
 def _no_evict() -> Evicted:
@@ -63,18 +76,28 @@ def contains(state: CacheState, block: jax.Array) -> jax.Array:
 
 
 def _insert_rows(state: CacheState, b: jax.Array, block: jax.Array,
-                 pf: jax.Array, src: jax.Array):
+                 pf: jax.Array, src: jax.Array,
+                 assoc_hint: jax.Array = None, scorer=None):
     """Insertion as branchless row values for bucket ``b``.
 
     Returns ``(rows, ev)`` where ``rows`` are the post-insert
-    (key, stamp, pf_flag, pf_sc, pf_src) rows. The empty-way /
-    second-chance / plain-eviction cases are all computed on the (W,)
-    bucket rows and selected as scalars (DESIGN.md §7) — the caller
-    applies one ``.at[b].set(row)`` scatter per table, so under ``vmap``
-    nothing ever copies the whole cache.
+    (key, stamp, pf_flag, pf_sc, pf_src, freq, assoc) rows. The
+    empty-way / second-chance / plain-eviction cases are all computed on
+    the (W,) bucket rows and selected as scalars (DESIGN.md §7) — the
+    caller applies one ``.at[b].set(row)`` scatter per table, so under
+    ``vmap`` nothing ever copies the whole cache.
+
+    ``scorer(recency, freq, assoc, pf_flag) -> (W,) scores`` replaces
+    the minimum-stamp victim with the minimum-score way (learned
+    eviction, DESIGN.md §12); ``scorer=None`` is the exact historical
+    stamp rule. Both victim rules consult the same second-chance
+    protection.
     """
     keys, stamps = state.key[b], state.stamp[b]
     flags, scs, srcs = state.pf_flag[b], state.pf_sc[b], state.pf_src[b]
+    freqs, assocs = state.freq[b], state.assoc[b]
+    if assoc_hint is None:
+        assoc_hint = jnp.int32(0)
     ways = jnp.arange(keys.shape[0])
 
     empty = keys == EMPTY
@@ -82,14 +105,27 @@ def _insert_rows(state: CacheState, b: jax.Array, block: jax.Array,
     w_empty = jnp.argmax(empty).astype(jnp.int32)
 
     # second chance: only consulted (and consumed) when evicting. The
-    # LRU victim, if an unused prefetch with its chance left, is
-    # refreshed to MRU once and the next-oldest way evicts instead.
+    # victim, if an unused prefetch with its chance left, is refreshed
+    # to MRU once and the next-best victim evicts instead.
     protected = (flags == 1) & (scs == 0)
-    v0 = jnp.argmin(stamps).astype(jnp.int32)
-    grant = protected[v0] & ~any_empty
-    stamps = jnp.where((ways == v0) & grant, state.clock, stamps)
-    scs = jnp.where((ways == v0) & grant, 1, scs)
-    v1 = jnp.argmin(stamps).astype(jnp.int32)
+    if scorer is None:
+        v0 = jnp.argmin(stamps).astype(jnp.int32)
+        grant = protected[v0] & ~any_empty
+        stamps = jnp.where((ways == v0) & grant, state.clock, stamps)
+        scs = jnp.where((ways == v0) & grant, 1, scs)
+        v1 = jnp.argmin(stamps).astype(jnp.int32)
+    else:
+        scores = scorer(state.clock - stamps, freqs, assocs, flags)
+        v0 = jnp.argmin(scores).astype(jnp.int32)
+        grant = protected[v0] & ~any_empty
+        stamps = jnp.where((ways == v0) & grant, state.clock, stamps)
+        scs = jnp.where((ways == v0) & grant, 1, scs)
+        # a granted way is out of the running this insertion; the stamp
+        # refresh above keeps the LRU bookkeeping consistent with it
+        top = (jnp.iinfo(scores.dtype).max
+               if jnp.issubdtype(scores.dtype, jnp.integer) else jnp.inf)
+        scores = jnp.where((ways == v0) & grant, top, scores)
+        v1 = jnp.argmin(scores).astype(jnp.int32)
     way = jnp.where(any_empty, w_empty, jnp.where(grant, v1, v0))
 
     ev = Evicted(
@@ -100,27 +136,30 @@ def _insert_rows(state: CacheState, b: jax.Array, block: jax.Array,
     at = ways == way
     rows = (jnp.where(at, block, keys), jnp.where(at, state.clock, stamps),
             jnp.where(at, pf, flags), jnp.where(at, 0, scs),
-            jnp.where(at, src, srcs))
+            jnp.where(at, src, srcs), jnp.where(at, 1, freqs),
+            jnp.where(at, assoc_hint, assocs))
     return rows, ev
 
 
 def _masked_rows(state: CacheState, b: jax.Array, rows, do: jax.Array):
     """Select ``rows`` where ``do`` else the current bucket rows."""
     old = (state.key[b], state.stamp[b], state.pf_flag[b],
-           state.pf_sc[b], state.pf_src[b])
+           state.pf_sc[b], state.pf_src[b], state.freq[b], state.assoc[b])
     return tuple(jnp.where(do, new, o) for new, o in zip(rows, old))
 
 
 def _set_bucket(state: CacheState, b: jax.Array, rows) -> CacheState:
-    key, stamp, flag, sc, src = rows
+    key, stamp, flag, sc, src, freq, assoc = rows
     return state._replace(
         key=state.key.at[b].set(key), stamp=state.stamp.at[b].set(stamp),
         pf_flag=state.pf_flag.at[b].set(flag),
-        pf_sc=state.pf_sc.at[b].set(sc), pf_src=state.pf_src.at[b].set(src))
+        pf_sc=state.pf_sc.at[b].set(sc), pf_src=state.pf_src.at[b].set(src),
+        freq=state.freq.at[b].set(freq), assoc=state.assoc.at[b].set(assoc))
 
 
 def access(state: CacheState, block: jax.Array, policy: str = "lru",
-           enabled: jax.Array = True):
+           enabled: jax.Array = True, scorer=None,
+           assoc_hint: jax.Array = None):
     """Demand access. Returns (state, hit, used_pf_src, evicted).
 
     On miss the block is demand-inserted. ``used_pf_src`` is the
@@ -128,7 +167,9 @@ def access(state: CacheState, block: jax.Array, policy: str = "lru",
     Hit and miss both resolve to one row write per table in bucket ``b``.
     With ``enabled=False`` the access is a bit-exact no-op reporting
     ``(hit=False, PF_NONE, no-evict)`` — how the sweep engine freezes
-    exhausted trace lanes without a carry-wide select.
+    exhausted trace lanes without a carry-wide select. ``scorer`` /
+    ``assoc_hint`` select learned eviction (see :func:`_insert_rows`);
+    hits additionally bump the way's residency frequency.
     """
     enabled = jnp.asarray(enabled)
     state = state._replace(clock=state.clock + enabled.astype(jnp.int32))
@@ -142,16 +183,19 @@ def access(state: CacheState, block: jax.Array, policy: str = "lru",
     used_src = jnp.where(enabled & hit & (state.pf_flag[b, way] == 1),
                          state.pf_src[b, way], PF_NONE)
 
-    # hit: touch the way (LRU) and consume its prefetch flag
+    # hit: touch the way (LRU), consume its prefetch flag, bump frequency
     hit_stamp = (jnp.where(at, state.clock, state.stamp[b])
                  if policy == "lru" else state.stamp[b])
     hit_rows = (keys, hit_stamp,
                 jnp.where(at, 0, state.pf_flag[b]), state.pf_sc[b],
-                jnp.where(at, PF_NONE, state.pf_src[b]))
+                jnp.where(at, PF_NONE, state.pf_src[b]),
+                jnp.where(at, state.freq[b] + 1, state.freq[b]),
+                state.assoc[b])
 
     # miss: demand-insert
     ins_rows, ins_ev = _insert_rows(state, b, block, jnp.int32(0),
-                                    jnp.int32(PF_NONE))
+                                    jnp.int32(PF_NONE),
+                                    assoc_hint=assoc_hint, scorer=scorer)
 
     rows = tuple(jnp.where(hit, h, m) for h, m in zip(hit_rows, ins_rows))
     no_ev = _no_evict()
@@ -162,7 +206,8 @@ def access(state: CacheState, block: jax.Array, policy: str = "lru",
 
 
 def insert_prefetch(state: CacheState, block: jax.Array, src: jax.Array,
-                    enable: jax.Array):
+                    enable: jax.Array, scorer=None,
+                    assoc_hint: jax.Array = None):
     """Prefetch-insert ``block`` if enabled, valid and absent.
 
     Returns (state, issued, evicted). A suppressed insert writes the
@@ -170,7 +215,8 @@ def insert_prefetch(state: CacheState, block: jax.Array, src: jax.Array,
     """
     do = enable & (block != EMPTY) & ~contains(state, block)
     b = bucket_of(block, state.key.shape[0])
-    rows, ins_ev = _insert_rows(state, b, block, jnp.int32(1), src)
+    rows, ins_ev = _insert_rows(state, b, block, jnp.int32(1), src,
+                                assoc_hint=assoc_hint, scorer=scorer)
     no_ev = _no_evict()
     ev = Evicted(*(jnp.where(do, i, n) for i, n in zip(ins_ev, no_ev)))
     return _set_bucket(state, b, _masked_rows(state, b, rows, do)), do, ev

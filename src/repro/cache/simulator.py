@@ -21,6 +21,7 @@ from jax import lax
 
 from repro.core import MithrilConfig, mithril
 from repro.core.hashindex import EMPTY
+from repro.learn.policy import LearnedConfig, make_scorer
 from . import base
 from .amp import AmpConfig, amp_access, amp_feedback_evicted, amp_feedback_used, init_amp
 from .base import PF_AMP, PF_MITHRIL, PF_NONE, PF_PG, N_PF_SRC
@@ -35,18 +36,22 @@ class SimConfig:
     use_mithril: bool = False
     use_amp: bool = False
     use_pg: bool = False
+    use_learned: bool = False     # learned admission/eviction (DESIGN.md §12)
     mithril: MithrilConfig = dataclasses.field(default_factory=MithrilConfig)
     amp: AmpConfig = dataclasses.field(default_factory=AmpConfig)
     pg: PgConfig = dataclasses.field(default_factory=PgConfig)
+    learned: LearnedConfig = dataclasses.field(default_factory=LearnedConfig)
 
     def label(self) -> str:
         """Canonical config name: prefetchers joined by ``-``, then policy.
 
         Single source of truth for benchmark CSV columns and
-        ``BENCH_sweep.json`` keys (e.g. ``mithril-amp-lru``) — keep
-        ``benchmarks.common.configs()`` keyed off this.
+        ``BENCH_sweep.json`` keys (e.g. ``mithril-amp-lru``,
+        ``learned-mithril-lru``) — keep ``benchmarks.common.configs()``
+        keyed off this.
         """
-        parts = [n for n, u in [("mithril", self.use_mithril),
+        parts = [n for n, u in [("learned", self.use_learned),
+                                ("mithril", self.use_mithril),
                                 ("amp", self.use_amp),
                                 ("pg", self.use_pg)] if u]
         return "-".join(parts + [self.policy])
@@ -79,12 +84,12 @@ class SimResult(NamedTuple):
         return float(self.stats.pf_used[src]) / issued if issued else float("nan")
 
 
-def _apply_prefetches(cfg, cache, stats, cands, src, enable):
+def _apply_prefetches(cfg, cache, stats, cands, src, enable, scorer=None):
     """Insert a fixed-length candidate vector; collect eviction feedback."""
     ev_blocks, ev_unused, ev_srcs = [], [], []
     for i in range(cands.shape[0]):
         cache, issued, ev = base.insert_prefetch(
-            cache, cands[i], jnp.int32(src), enable)
+            cache, cands[i], jnp.int32(src), enable, scorer=scorer)
         stats = stats._replace(
             pf_issued=stats.pf_issued.at[src].add(issued.astype(jnp.int32)),
             pf_evicted_unused=stats.pf_evicted_unused.at[ev.pf_src].add(
@@ -120,6 +125,10 @@ def build_segments(cfg: SimConfig):
     triggering mining inside ``record``.
     """
     rec_on = cfg.mithril.record_on
+    # learned eviction (DESIGN.md §12): one pure scorer closure per
+    # config, threaded into every insertion path. Python-level branch on
+    # a static config flag — no lax.cond enters the request path.
+    scorer = make_scorer(cfg.learned) if cfg.use_learned else None
 
     def init_carry():
         carry = {
@@ -139,8 +148,14 @@ def build_segments(cfg: SimConfig):
         valid = aux["valid"]
         cache, stats = carry["cache"], carry["stats"]
         stats = stats._replace(requests=stats.requests + valid.astype(jnp.int32))
+        # association-count feature for learned insertion: how many
+        # associations mining has recorded with this block as source
+        # (a pure pf-table read, so no mining-barrier interaction)
+        hint = (mithril.assoc_count(cfg.mithril, carry["mith"], block)
+                if cfg.use_learned and cfg.use_mithril else None)
         cache, hit, used_src, ev = base.access(cache, block, cfg.policy,
-                                               enabled=valid)
+                                               enabled=valid, scorer=scorer,
+                                               assoc_hint=hint)
         stats = stats._replace(
             hits=stats.hits + hit.astype(jnp.int32),
             pf_used=stats.pf_used.at[used_src].add(
@@ -194,7 +209,8 @@ def build_segments(cfg: SimConfig):
         if cfg.use_mithril:
             cands = mithril.lookup(cfg.mithril, carry["mith"], block)
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
-                                                PF_MITHRIL, valid)
+                                                PF_MITHRIL, valid,
+                                                scorer=scorer)
 
         # AMP sequential prefetching + degree feedback. Every piece is
         # source-gated: the feedbacks key off valid-gated signals
@@ -205,7 +221,8 @@ def build_segments(cfg: SimConfig):
                                     used_src == PF_AMP)
             amp, vec = amp_access(cfg.amp, amp, block, enabled=valid)
             cache, stats, evs = _apply_prefetches(cfg, cache, stats, vec,
-                                                  PF_AMP, valid)
+                                                  PF_AMP, valid,
+                                                  scorer=scorer)
             evb, evu, evsrc = evs
             for i in range(evb.shape[0]):
                 amp = amp_feedback_evicted(cfg.amp, amp, evb[i],
@@ -219,7 +236,7 @@ def build_segments(cfg: SimConfig):
             pg = carry["pg"]
             pg, cands = pg_access(cfg.pg, pg, block, enabled=valid)
             cache, stats, _ = _apply_prefetches(cfg, cache, stats, cands,
-                                                PF_PG, valid)
+                                                PF_PG, valid, scorer=scorer)
             out["pg"] = pg
 
         out["cache"], out["stats"] = cache, stats

@@ -72,6 +72,19 @@ def lookup(cfg: MithrilConfig, state: MithrilState, block: jax.Array) -> jax.Arr
     return jnp.where(found, vals, jnp.full((cfg.prefetch_list,), EMPTY, jnp.int32))
 
 
+def assoc_count(cfg: MithrilConfig, state: MithrilState,
+                block: jax.Array) -> jax.Array:
+    """Associations recorded with ``block`` as source (0 when absent).
+
+    Pure read of the prefetching table like :func:`lookup` — safe at any
+    point of the record/maybe_mine cycle. Feeds the learned policy's
+    association-count feature (DESIGN.md §12): how sporadic-association
+    mining has weighted this block so far.
+    """
+    b, way, found = probe(state.pf_key, block, cfg.pf_buckets)
+    return jnp.where(found, state.pf_cnt[b, way], jnp.int32(0))
+
+
 def add_association(cfg: MithrilConfig, state: MithrilState,
                     src: jax.Array, dst: jax.Array,
                     valid: jax.Array) -> MithrilState:

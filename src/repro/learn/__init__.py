@@ -1,0 +1,27 @@
+"""Learned & adaptive cache management (DESIGN.md §12).
+
+``policy`` — the branchless learned eviction scorer that plugs into
+``cache/base``; imported eagerly (no dependency on the cache layer, so
+``cache.simulator`` can import it without a cycle). ``adapt`` and
+``train`` depend on the cache/sweep stack and are loaded lazily.
+"""
+
+from .policy import (DEFAULT_LOGREG, DEFAULT_MLP, LearnedConfig, features,
+                     make_scorer, score_rows)
+
+_LAZY = {
+    "SearchGrid": "adapt", "AdaptResult": "adapt", "hill_climb": "adapt",
+    "bandit": "adapt", "arm_label": "adapt",
+    "extract_features": "train", "train_configs": "train",
+}
+
+__all__ = ["DEFAULT_LOGREG", "DEFAULT_MLP", "LearnedConfig", "features",
+           "make_scorer", "score_rows", *sorted(_LAZY)]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f".{_LAZY[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

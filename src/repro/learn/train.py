@@ -1,0 +1,153 @@
+"""Offline training for the learned admission/eviction policy.
+
+    PYTHONPATH=src python -m repro.learn.train [--scale quick] [--steps 400]
+
+Protocol (DESIGN.md §12): replay corpus-registry traces on the host and
+emit one sample per request — features as the request path would see
+them (recency / residency frequency / association-count proxy /
+prefetch flag), label = "reused within the horizon". Train the
+``repro.models.policy_head`` twins with ``repro.optim.adamw`` (fixed
+seed, full-batch), freeze the float32 weights into the hashable tuples
+``repro.learn.policy.LearnedConfig`` carries, and print them as Python
+literals for checking in as the policy defaults.
+
+Offline/online feature deviations (documented, DESIGN.md §12): the
+association count is a support proxy (re-occurrences within the
+lookahead window) rather than the live MITHRIL table count, and the
+prefetch flag is always 0 offline — its weight stays at initialization
+and the runtime signal rides on the trained recency/frequency weights.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.learn.policy import (ASSOC_CAP, FREQ_CAP, RECENCY_CAP,
+                                LearnedConfig, params_to_weights)
+
+DEFAULT_HORIZON = 1024      # reuse-within-horizon label (≈ 2x cache capacity)
+DEFAULT_LOOKAHEAD = 100     # association-proxy window (paper Delta)
+
+
+def extract_features(blocks: np.ndarray, lengths: np.ndarray,
+                     horizon: int = DEFAULT_HORIZON,
+                     lookahead: int = DEFAULT_LOOKAHEAD,
+                     stride: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """(X, y) training samples from a padded (B, T) trace batch.
+
+    Feature normalization matches ``repro.learn.policy.features``
+    exactly (power-of-two cap + scale), so trained weights transfer to
+    the request path without recalibration.
+    """
+    xs, ys = [], []
+    for t in range(blocks.shape[0]):
+        trace = np.asarray(blocks[t, : int(lengths[t])], np.int64)
+        n = len(trace)
+        if n < 2:
+            continue
+        # next-occurrence distance via one reversed pass
+        next_gap = np.full((n,), RECENCY_CAP, np.int64)
+        seen: Dict[int, int] = {}
+        for i in range(n - 1, -1, -1):
+            blk = int(trace[i])
+            if blk in seen:
+                next_gap[i] = seen[blk] - i
+            seen[blk] = i
+        last: Dict[int, int] = {}
+        freq: Dict[int, int] = {}
+        assoc: Dict[int, int] = {}
+        for i in range(0, n, stride):
+            blk = int(trace[i])
+            rec = i - last.get(blk, i - RECENCY_CAP)
+            fr = freq.get(blk, 0)
+            ac = assoc.get(blk, 0)
+            xs.append((min(max(rec, 0), RECENCY_CAP) / RECENCY_CAP,
+                       min(fr, FREQ_CAP) / FREQ_CAP,
+                       min(ac, ASSOC_CAP) / ASSOC_CAP,
+                       0.0))
+            ys.append(1.0 if next_gap[i] <= horizon else 0.0)
+            freq[blk] = fr + 1
+            if blk in last and rec <= lookahead:
+                assoc[blk] = ac + 1       # sporadic-support proxy
+            last[blk] = i
+    x = np.asarray(xs, np.float32)
+    y = np.asarray(ys, np.float32)
+    return x, y
+
+
+def train_head(kind: str, x: np.ndarray, y: np.ndarray, *,
+               steps: int = 400, seed: int = 0,
+               lr: float = 0.05) -> Tuple[dict, list]:
+    """AdamW full-batch training; returns (params, loss trajectory)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import policy_head
+    from repro.optim import adamw
+
+    params = policy_head.init_params(kind, seed=seed)
+    cfg = adamw.AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=1.0,
+                            warmup_steps=max(1, steps // 20),
+                            total_steps=steps)
+    state = adamw.init(params)
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(
+            lambda p: policy_head.bce_loss(kind, p, xj, yj))(params)
+        params, state, _ = adamw.update(cfg, grads, state, params)
+        return params, state, loss
+
+    losses = []
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    return params, losses
+
+
+def train_configs(scale: str = "quick", trace_len: int = 4000, *,
+                  steps: int = 400, seed: int = 0,
+                  stride: int = 4) -> Dict[str, LearnedConfig]:
+    """Train both heads on the corpus registry slice; returns configs."""
+    from repro.traces import build_corpus, corpus_specs
+    from repro.traces.synthetic import stack_padded
+
+    _, blocks, lengths = stack_padded(build_corpus(
+        corpus_specs(trace_len, scale)))
+    x, y = extract_features(blocks, lengths, stride=stride)
+    out = {}
+    for kind in ("logreg", "mlp"):
+        params, losses = train_head(kind, x, y, steps=steps, seed=seed)
+        out[kind] = LearnedConfig(kind=kind,
+                                  weights=params_to_weights(kind, params))
+        print(f"  [train] {kind}: {len(x)} samples, "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    return out
+
+
+def _parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.strip().splitlines()[0])
+    ap.add_argument("--scale", default="quick",
+                    help="corpus registry scale to train on")
+    ap.add_argument("--trace-len", type=int, default=4000)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stride", type=int, default=4,
+                    help="sample every Nth request")
+    return ap
+
+
+def main(argv=None) -> None:
+    a = _parser().parse_args(argv)
+    cfgs = train_configs(a.scale, a.trace_len, steps=a.steps, seed=a.seed,
+                         stride=a.stride)
+    for kind, cfg in cfgs.items():
+        print(f"\nDEFAULT_{kind.upper()} = {cfg.weights!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Tiny policy heads for the learned cache-management lane (DESIGN.md §12).
+
+The training-time twin of ``repro.learn.policy``: the same two model
+shapes (logistic regression, one-ReLU-hidden-layer MLP) expressed over
+batched feature matrices with array parameters, so ``repro.learn.train``
+can differentiate them and run them through ``repro.optim.adamw``. After
+training, ``repro.learn.policy.params_to_weights`` freezes the arrays
+into the hashable tuples the request-path scorer carries.
+
+The request path is authoritative: it applies the weights with a fixed
+unrolled accumulation order (bit-reproducibility there matters); this
+head uses plain matmuls (training does not need bit-stable order, only
+the frozen weights do).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+N_FEATURES = 4
+
+
+def init_params(kind: str, seed: int = 0, hidden: int = 8,
+                n_features: int = N_FEATURES) -> dict:
+    """Fresh head parameters (fp32; scaled-normal init like the LM stack)."""
+    key = jax.random.PRNGKey(seed)
+    if kind == "logreg":
+        return {"w": 0.1 * jax.random.normal(key, (n_features,), jnp.float32),
+                "b": jnp.zeros((), jnp.float32)}
+    if kind != "mlp":
+        raise ValueError(f"bad policy head kind: {kind}")
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (n_features, hidden), jnp.float32)
+        / jnp.sqrt(jnp.float32(n_features)),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (hidden,), jnp.float32)
+        / jnp.sqrt(jnp.float32(hidden)),
+        "b2": jnp.zeros((), jnp.float32),
+    }
+
+
+def apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    """Keep-score logits for a (N, F) feature batch -> (N,)."""
+    if kind == "logreg":
+        return x @ params["w"] + params["b"]
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)
+    return h @ params["w2"] + params["b2"]
+
+
+def bce_loss(kind: str, params: dict, x: jax.Array,
+             y: jax.Array) -> jax.Array:
+    """Mean sigmoid cross-entropy of keep-logits vs reuse labels.
+
+    Stable form: ``max(z,0) - z*y + log1p(exp(-|z|))``.
+    """
+    z = apply(kind, params, x)
+    y = y.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(z))))

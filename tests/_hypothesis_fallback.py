@@ -7,8 +7,8 @@ installed — e.g. in GitHub CI — it is used untouched).
 
 Covered surface: ``@settings(max_examples=, deadline=)`` stacked on
 ``@given(*strategies)``, plus ``st.integers(lo, hi)``,
-``st.booleans()``, ``st.tuples(*elems)`` and
-``st.lists(elem, min_size=, max_size=)``. Examples are drawn from a
+``st.booleans()``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``,
+``st.tuples(*elems)`` and ``st.lists(elem, min_size=, max_size=)``. Examples are drawn from a
 per-test deterministic PRNG (seeded from the test's qualified name) so
 runs are reproducible; there is no shrinking — the failing example is in
 the assertion traceback.
@@ -36,6 +36,17 @@ def integers(min_value: int, max_value: int) -> _Strategy:
 
 def booleans() -> _Strategy:
     return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    """Uniform floats on a closed interval (the suite always bounds
+    its float strategies, so no NaN/inf handling is needed)."""
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
 
 
 def tuples(*elements: _Strategy) -> _Strategy:
@@ -89,6 +100,8 @@ def install():
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
     st_mod.booleans = booleans
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
     st_mod.tuples = tuples
     st_mod.lists = lists
     hyp = types.ModuleType("hypothesis")

@@ -1,0 +1,166 @@
+"""Online adaptation: static reduction, determinism, compile reuse.
+
+ISSUE 8 differential-testing satellites for ``repro.learn.adapt``:
+
+* zero-step adaptation IS the static sweep, bit for bit — the adapter
+  with no episodes returns the very result ``cache/sweep.sweep``
+  produces for the static config;
+* a fixed-seed bandit run is reproducible across processes (decision
+  history and committed arms — the cross-process pattern of
+  ``tests/test_corpus.py``);
+* no searcher ever commits outside the declared :class:`SearchGrid`,
+  and the commit guard keeps every trace at or above the static
+  baseline;
+* adaptation episodes reuse the sweep engine's compiled chunk runners:
+  one compile per distinct config however many episodes/prefixes run,
+  and a repeat run compiles nothing (``tests/test_sweep.py``'s budget
+  discipline extended to the adapter loop).
+"""
+
+import os
+import subprocess
+import sys
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.cache import SimConfig, sweep
+from repro.cache.sweep import reset_runners
+from repro.learn import SearchGrid, arm_label, bandit, hill_climb
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+CHUNK = 256
+GRID = SearchGrid(lookaheads=(50, 200), min_supports=(2, 4),
+                  pf_sizes=(1,))
+BASE = SimConfig(capacity=64, use_mithril=True)
+
+
+def _corpus():
+    """Tiny deterministic corpus: assoc-heavy + random lanes, unequal
+    lengths so padded tails are in play."""
+    rng = np.random.default_rng(7)
+    blocks = rng.integers(0, 150, size=(4, 512)).astype(np.int32)
+    blocks[1, 1::3] = blocks[1, 0::3] + 1     # correlated pairs
+    lengths = np.array([512, 512, 400, 301])
+    return blocks, lengths
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return _corpus()
+
+
+class TestStaticReduction:
+    def test_zero_episode_bandit_is_static_sweep(self, corpus):
+        blocks, lengths = corpus
+        r = bandit(BASE, blocks, lengths, GRID, episodes=0, chunk=CHUNK)
+        ref = sweep(BASE, blocks, lengths=lengths, chunk=CHUNK,
+                    shard=False)
+        assert r.arms == (-1,) * 4
+        assert set(r.labels) == {"static"}
+        for field, a, b in zip(ref.stats._fields, r.base_result.stats,
+                               ref.stats):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"stats.{field} diverged from the static sweep")
+        np.testing.assert_array_equal(r.base_result.hit_curve,
+                                      ref.hit_curve)
+        np.testing.assert_array_equal(r.hit_ratios, ref.hit_ratios())
+
+    def test_empty_prefix_hill_climb_is_static(self, corpus):
+        blocks, lengths = corpus
+        r = hill_climb(BASE, blocks, lengths, GRID, prefix_fracs=(),
+                       chunk=CHUNK)
+        assert r.arms == (-1,) * 4 and r.episodes == 0
+        np.testing.assert_array_equal(r.hit_ratios, r.base_hit_ratios)
+
+
+class TestSearchContract:
+    def test_commits_stay_on_declared_grid(self, corpus):
+        blocks, lengths = corpus
+        for r in (hill_climb(BASE, blocks, lengths, GRID, chunk=CHUNK),
+                  bandit(BASE, blocks, lengths, GRID, episodes=4,
+                         chunk=CHUNK)):
+            for arm, label in zip(r.arms, r.labels):
+                assert arm == -1 or 0 <= arm < GRID.n_arms
+                assert label == ("static" if arm == -1
+                                 else arm_label(GRID, arm))
+                if arm >= 0:
+                    assert GRID.contains(BASE, GRID.config(BASE, arm))
+            for _, _, t, arm, _ in r.history:
+                assert 0 <= arm < GRID.n_arms and 0 <= t < 4
+
+    def test_commit_guard_never_loses_to_static(self, corpus):
+        blocks, lengths = corpus
+        for r in (hill_climb(BASE, blocks, lengths, GRID, chunk=CHUNK),
+                  bandit(BASE, blocks, lengths, GRID, episodes=4,
+                         chunk=CHUNK)):
+            assert (np.asarray(r.hit_ratios)
+                    >= np.asarray(r.base_hit_ratios)).all()
+
+
+class TestDeterminism:
+    def test_fixed_seed_bandit_reproduces_in_process(self, corpus):
+        blocks, lengths = corpus
+        a = bandit(BASE, blocks, lengths, GRID, episodes=4, seed=11,
+                   chunk=CHUNK)
+        b = bandit(BASE, blocks, lengths, GRID, episodes=4, seed=11,
+                   chunk=CHUNK)
+        assert a.arms == b.arms and a.history == b.history
+        assert bandit(BASE, blocks, lengths, GRID, episodes=4, seed=12,
+                      chunk=CHUNK).history != a.history
+
+    def test_fixed_seed_bandit_reproduces_across_processes(self, corpus):
+        """A fresh interpreter makes identical decisions — the decision
+        tensor is a pure function of the seed, never interpreter state."""
+        blocks, lengths = corpus
+        here = bandit(BASE, blocks, lengths, GRID, episodes=3, seed=5,
+                      chunk=CHUNK)
+        want = (list(here.arms),
+                zlib.crc32(repr(here.history).encode()))
+        script = (
+            "import numpy as np, zlib\n"
+            "from repro.cache import SimConfig\n"
+            "from repro.learn import SearchGrid, bandit\n"
+            "rng = np.random.default_rng(7)\n"
+            "blocks = rng.integers(0, 150, size=(4, 512))"
+            ".astype(np.int32)\n"
+            "blocks[1, 1::3] = blocks[1, 0::3] + 1\n"
+            "lengths = np.array([512, 512, 400, 301])\n"
+            "grid = SearchGrid(lookaheads=(50, 200),"
+            " min_supports=(2, 4), pf_sizes=(1,))\n"
+            "r = bandit(SimConfig(capacity=64, use_mithril=True),"
+            " blocks, lengths, grid, episodes=3, seed=5, chunk=256)\n"
+            "print(list(r.arms))\n"
+            "print(zlib.crc32(repr(r.history).encode()))\n")
+        env = dict(os.environ, JAX_PLATFORMS="cpu",
+                   PYTHONPATH=SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stderr
+        arms_line, crc_line = out.stdout.strip().splitlines()[-2:]
+        assert arms_line == str(want[0])
+        assert int(crc_line) == want[1]
+
+
+class TestCompileBudget:
+    def test_episodes_reuse_chunk_runners(self, corpus):
+        """However many episodes and prefixes run, each distinct config
+        compiles its (chunk, B) runner at most once — the evaluator pads
+        prefixes to chunk multiples so episode sweeps share the shape.
+        A repeat adaptation run compiles nothing at all."""
+        blocks, lengths = corpus
+        reset_runners()
+        r1 = hill_climb(BASE, blocks, lengths, GRID, chunk=CHUNK)
+        assert 0 < r1.compiles <= GRID.n_arms + 1, \
+            f"adapter caused {r1.compiles} compiles for " \
+            f"{GRID.n_arms} arms + base"
+        r2 = bandit(BASE, blocks, lengths, GRID, episodes=4, chunk=CHUNK)
+        assert r2.compiles <= GRID.n_arms, \
+            "bandit recompiled configs the hill-climb already built"
+        r3 = hill_climb(BASE, blocks, lengths, GRID, chunk=CHUNK)
+        assert r3.compiles == 0, \
+            f"repeat adaptation recompiled {r3.compiles} runner(s)"

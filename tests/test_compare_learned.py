@@ -1,0 +1,130 @@
+"""Round-trip the learned-lane gate in ``benchmarks.compare``.
+
+ISSUE 8 satellite: the ``"learned"`` BENCH section is deterministic
+telemetry — committed arms, per-trace hit ratios and the
+decision-history CRC are pure functions of (corpus, grid, seed) — so
+drift must FAIL the comparison exactly like sweep hit ratios, while
+schema skew (a baseline seeded before the section or before a field
+existed) must WARN and skip, never KeyError. Same doc-builder
+round-trip style as ``tests/test_roofline.py``'s kernel-gate tests.
+"""
+
+import copy
+
+from benchmarks.compare import compare
+
+
+def _learned_entry(**kw):
+    entry = {
+        "job": "adaptive_quick", "config": "bandit", "scale": "quick",
+        "episodes": 8, "arms": [3, -1, 7], "labels":
+        ["la=25,r=4,p=2", "static", "la=100,r=4,p=2"],
+        "hit_ratios": [0.5, 0.41, 0.33],
+        "base_hit_ratios": [0.48, 0.41, 0.31],
+        "hit_ratio_mean": 0.413333, "base_hit_ratio_mean": 0.4,
+        "decisions_crc": "deadbeef", "compiles": 9, "seconds": 4.0,
+    }
+    entry.update(kw)
+    return entry
+
+
+def _doc(learned, meta=None):
+    meta = dict({"suite": "quick", "quick": True, "trace_len": 100,
+                 "corpus_scale": "quick", "corpus_len": 50,
+                 "n_devices": 1}, **(meta or {}))
+    # one shared sweep keeps base_ix non-empty, i.e. geometry comparable
+    sweep = {"job": "j", "config": "c", "hit_ratios": [0.5],
+             "seconds": 1.0, "compiles": 1}
+    return {"meta": meta, "jobs": [], "sweeps": [sweep],
+            "learned": learned}
+
+
+def _compare(fresh, baseline, warn=0.20):
+    return compare(fresh, baseline, warn)
+
+
+def test_identical_learned_docs_pass():
+    doc = _doc([_learned_entry(),
+                _learned_entry(config="hill-climb", decisions_crc="0a1b")])
+    failures, warnings, _, _ = _compare(doc, copy.deepcopy(doc))
+    assert not failures and not warnings
+
+
+def test_deterministic_drift_fails():
+    base = _doc([_learned_entry()])
+    for field, drifted in [("arms", [3, -1, 6]),
+                           ("labels", ["la=25,r=4,p=2", "static",
+                                       "la=100,r=2,p=2"]),
+                           ("hit_ratios", [0.5, 0.41, 0.330001]),
+                           ("base_hit_ratios", [0.48, 0.42, 0.31]),
+                           ("episodes", 9),
+                           ("decisions_crc", "deadbeee")]:
+        fresh = _doc([_learned_entry(**{field: drifted})])
+        failures, _, _, _ = _compare(fresh, base)
+        assert any(f"'{field}' drifted" in f for f in failures), \
+            (field, failures)
+
+
+def test_compile_count_is_not_gated():
+    # process-history-dependent: a warm cache legitimately reports fewer
+    base = _doc([_learned_entry()])
+    failures, warnings, _, _ = _compare(
+        _doc([_learned_entry(compiles=0)]), base)
+    assert not failures and not warnings
+
+
+def test_missing_from_fresh_fails():
+    base = _doc([_learned_entry()])
+    failures, _, _, _ = _compare(_doc([]), base)
+    assert any("missing from fresh run" in f and "learned" in f
+               for f in failures)
+
+
+def test_baseline_without_learned_section_warns_not_fails():
+    """A baseline seeded before ISSUE 8 has no 'learned' key at all —
+    the fresh entries are unchecked with a WARN, never a KeyError."""
+    fresh = _doc([_learned_entry()])
+    base = _doc([])
+    del base["learned"]
+    failures, warnings, _, _ = _compare(fresh, base)
+    assert not failures
+    assert any("no 'learned' section" in w for w in warnings)
+    # ... and an empty fresh section stays silent against the same base
+    fresh2 = _doc([])
+    f2, w2, _, _ = _compare(fresh2, base)
+    assert not f2 and not w2
+
+
+def test_baseline_entry_missing_field_warns_not_fails():
+    fresh = _doc([_learned_entry()])
+    old = _learned_entry()
+    del old["decisions_crc"]
+    failures, warnings, _, _ = _compare(fresh, _doc([old]))
+    assert not failures
+    assert any("no 'decisions_crc'" in w and "older schema" in w
+               for w in warnings)
+
+
+def test_new_adaptive_run_noted_not_failed():
+    fresh = _doc([_learned_entry(),
+                  _learned_entry(config="hill-climb")])
+    base = _doc([_learned_entry()])
+    failures, _, notes, _ = _compare(fresh, base)
+    assert not failures
+    assert any("not in baseline" in n for n in notes)
+
+
+def test_wallclock_regression_warns_not_fails():
+    fresh = _doc([_learned_entry(seconds=9.0)])
+    base = _doc([_learned_entry(seconds=4.0)])
+    failures, warnings, _, _ = _compare(fresh, base)
+    assert not failures
+    assert any("wall-clock" in w and "learned" in w for w in warnings)
+
+
+def test_geometry_mismatch_skips_learned_gate():
+    fresh = _doc([_learned_entry(decisions_crc="ffffffff")],
+                 meta={"corpus_len": 500})
+    failures, _, notes, n = _compare(fresh, _doc([_learned_entry()]))
+    assert n == 0 and not failures
+    assert any("geometry differs" in x for x in notes)

@@ -244,7 +244,10 @@ def _insert_ref(state: CacheState, block, pf, src):
         stamp=st.stamp.at[b, way].set(st.clock),
         pf_flag=st.pf_flag.at[b, way].set(pf),
         pf_sc=st.pf_sc.at[b, way].set(0),
-        pf_src=st.pf_src.at[b, way].set(src))
+        pf_src=st.pf_src.at[b, way].set(src),
+        # learned-feature tables (ISSUE 8): maintained for every policy
+        freq=st.freq.at[b, way].set(1),
+        assoc=st.assoc.at[b, way].set(0))
     return st, ev
 
 
@@ -267,7 +270,8 @@ def cache_access_reference(state: CacheState, block, policy="lru"):
                  else st.stamp)
         st = st._replace(stamp=stamp,
                          pf_flag=st.pf_flag.at[b, way].set(0),
-                         pf_src=st.pf_src.at[b, way].set(base.PF_NONE))
+                         pf_src=st.pf_src.at[b, way].set(base.PF_NONE),
+                         freq=st.freq.at[b, way].add(1))
         return st, _no_evict_ref()
 
     def on_miss(st):

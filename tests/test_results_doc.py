@@ -61,7 +61,8 @@ def test_results_md_commands_parse_via_driver_argparsers():
             pytest.fail(f"documented command no longer parses: "
                         f"python -m {modname} {argstr!r} ({e})")
     # the crosswalk must cover every figure driver, not a subset
-    for required in ("benchmarks.table1_hit_ratio",
+    for required in ("benchmarks.adaptive_bench",
+                     "benchmarks.table1_hit_ratio",
                      "benchmarks.fig34_trace_sweep",
                      "benchmarks.fig5_representative",
                      "benchmarks.fig6_hrc_precision",

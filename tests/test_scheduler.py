@@ -297,15 +297,18 @@ def test_no_cond_in_request_path_sources():
     import repro.cache.amp
     import repro.cache.base
     import repro.cache.pg
+    import repro.learn.policy
     from repro.cache.simulator import build_segments
-    from repro.core.mithril import add_association, record_event
+    from repro.core.mithril import add_association, assoc_count, record_event
     sources = {
         "cache/amp.py": inspect.getsource(repro.cache.amp),
         "cache/base.py": inspect.getsource(repro.cache.base),
         "cache/pg.py": inspect.getsource(repro.cache.pg),
+        "learn/policy.py": inspect.getsource(repro.learn.policy),
         "simulator.build_segments": inspect.getsource(build_segments),
         "mithril.record_event": inspect.getsource(record_event),
         "mithril.add_association": inspect.getsource(add_association),
+        "mithril.assoc_count": inspect.getsource(assoc_count),
     }
     for name, src in sources.items():
         assert not _calls_cond_or_switch(src), \

@@ -1,0 +1,105 @@
+"""Seed ``results/coverage_floor.txt`` without coverage.py.
+
+The CI coverage lane (``.github/workflows/ci.yml`` job ``coverage``)
+runs tier-1 under real ``pytest-cov`` and fails below the checked-in
+floor. This container has no coverage tooling, so the floor is seeded
+from a ``sys.settrace`` measurement of the same tier-1 run:
+
+    PYTHONPATH=src python tools/seed_coverage_floor.py [pytest args...]
+
+* executed lines: a global trace hook that only installs per-frame line
+  tracing for code compiled from ``src/repro`` (every other frame —
+  pytest, jax — opts out at call time, keeping overhead bounded);
+* statement denominator: ``dis.findlinestarts`` over every code object
+  in every ``src/repro`` module — the same line table coverage.py's
+  statement count is built from.
+
+The two measures are close to, but not identical with, coverage.py's
+(it additionally excludes ``pragma: no cover`` and some docstring
+lines), so the floor is written with a safety margin subtracted —
+CI should only trip on a real coverage drop, never on tool skew.
+Refresh after a PR that meaningfully grows tested code:
+
+    PYTHONPATH=src python tools/seed_coverage_floor.py && git add \
+        results/coverage_floor.txt
+"""
+
+import dis
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+SRC = os.path.join(ROOT, "src", "repro")
+FLOOR_FILE = os.path.join(ROOT, "results", "coverage_floor.txt")
+MARGIN = 3  # percentage points: tool-skew headroom vs real coverage.py
+
+_executed = set()
+
+
+def _local(frame, event, arg):
+    if event == "line":
+        _executed.add((frame.f_code.co_filename, frame.f_lineno))
+    return _local
+
+
+def _global(frame, event, arg):
+    if event == "call" and frame.f_code.co_filename.startswith(SRC):
+        return _local
+    return None
+
+
+def _statements(path):
+    """Statement lines of a source file, from its code-object line table."""
+    with open(path, encoding="utf-8") as fh:
+        try:
+            code = compile(fh.read(), path, "exec")
+        except SyntaxError:
+            return set()
+    lines, todo = set(), [code]
+    while todo:
+        co = todo.pop()
+        lines.update(ln for _, ln in dis.findlinestarts(co) if ln)
+        todo.extend(c for c in co.co_consts if hasattr(c, "co_code"))
+    return lines
+
+
+def main(argv):
+    import pytest
+
+    sys.settrace(_global)
+    try:
+        rc = pytest.main(["-q", *argv] if argv else ["-q"])
+    finally:
+        sys.settrace(None)
+    if rc != 0:
+        print(f"pytest failed (rc={rc}); floor not written", file=sys.stderr)
+        return int(rc)
+
+    total_st = total_hit = 0
+    rows = []
+    for dirpath, _, names in os.walk(SRC):
+        for name in sorted(names):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            st = _statements(path)
+            hit = {ln for f, ln in _executed if f == path} & st
+            total_st += len(st)
+            total_hit += len(hit)
+            pct = 100.0 * len(hit) / len(st) if st else 100.0
+            rows.append((os.path.relpath(path, ROOT), len(st), len(hit), pct))
+    for rel, st, hit, pct in rows:
+        print(f"{rel:55s} {hit:5d}/{st:5d} {pct:6.1f}%")
+    pct = 100.0 * total_hit / max(total_st, 1)
+    floor = max(0, int(pct) - MARGIN)
+    print(f"{'TOTAL':55s} {total_hit:5d}/{total_st:5d} {pct:6.1f}%")
+    print(f"writing floor {floor} (measured {pct:.1f}% - {MARGIN}pp margin) "
+          f"-> {os.path.relpath(FLOOR_FILE, ROOT)}")
+    with open(FLOOR_FILE, "w", encoding="utf-8") as fh:
+        fh.write(f"{floor}\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
