@@ -61,6 +61,7 @@ def pf_src_of(cfg: SimConfig) -> int:
 _TELEMETRY: List[dict] = []
 _PACKER: List[dict] = []
 _SERVING: List[dict] = []
+_STREAMING: List[dict] = []
 _KERNELS: List[dict] = []
 _LEARNED: List[dict] = []
 
@@ -143,6 +144,30 @@ def serving_telemetry() -> List[dict]:
     return list(_SERVING)
 
 
+def record_streaming(job: str, config: str, stats: Dict) -> None:
+    """Log one streaming-engine run (``StreamResult.streaming_stats()``).
+
+    The schedule counters (lane width, slab count, waste ratio, the
+    async flag, plus any deterministic extras the caller folds in such
+    as ``hit_ratio_mean``) are FAIL-gated by ``benchmarks.compare``;
+    the ``"pipeline"`` timing/stall subdict — stage-busy seconds,
+    producer/consumer stall counts, overlap efficiency — only WARNs.
+    """
+    entry = {"job": job, "config": config, **stats}
+    _STREAMING.append(entry)
+    p = entry.get("pipeline") or {}
+    print(f"  [{job}] {config:<8} slabs={entry['n_slabs']} "
+          f"waste={entry['waste_ratio']:.4f} "
+          f"wall={p.get('wall_s', 0.0):.2f}s "
+          f"overlap={p.get('overlap', 0.0):.2f} "
+          f"stalls={p.get('producer_stalls', 0)}p/"
+          f"{p.get('consumer_stalls', 0)}c")
+
+
+def streaming_telemetry() -> List[dict]:
+    return list(_STREAMING)
+
+
 def record_kernel(kernel: str, shape: str, matches_oracle: bool,
                   roofline: Dict, wallclock_us: float = None) -> None:
     """Log one kernel-microbenchmark roofline point for BENCH json.
@@ -198,6 +223,7 @@ def write_bench_json(meta: dict, jobs: List[dict]) -> str:
                    "sweeps": sweep_telemetry(),
                    "packer": packer_telemetry(),
                    "serving": serving_telemetry(),
+                   "streaming": streaming_telemetry(),
                    "kernels": kernels_telemetry(),
                    "learned": learned_telemetry()}, f, indent=2)
     print(f"wrote {path}")

@@ -30,6 +30,13 @@ Policy (make CI *compare* trajectories, not just archive them):
   batch occupancy, the whole tier counter dict) are deterministic
   given the workload, so any drift FAILS; wall-clock throughput and
   step-latency percentiles only WARN, like sweep wall-clock;
+* streaming pipeline (ISSUE 9): the async-producer runs recorded in
+  the ``"streaming"`` section split the same way — lane geometry, slab
+  counts, waste ratio, the async flag and the folded-in mean hit ratio
+  are deterministic and FAIL on drift (and an entry with no
+  ``"pipeline"`` telemetry FAILS outright); stage-busy timings, ring
+  stall counters and overlap efficiency are scheduling noise and only
+  WARN;
 * per-kernel roofline (ISSUE 7): kernel-vs-oracle agreement FAILs on
   mismatch, and the roofline bytes-moved model is pure arithmetic over
   the launch geometry, so any bytes regression vs the baseline FAILS
@@ -206,6 +213,54 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
                                  for s in fresh.get("serving", [])}:
         if base_ix:
             failures.append(f"serving {key}: missing from fresh run")
+
+    # streaming pipeline (ISSUE 9): schedule counters and the async
+    # flag are deterministic given (corpus, lane geometry) — drift
+    # FAILS, as does an entry missing its pipeline telemetry; stage
+    # timings, stall counts and overlap are scheduling noise and WARN
+    det_st = ("lane_width", "chunk", "n_slabs", "lane_steps",
+              "ideal_lane_steps", "waste_ratio", "async_producer",
+              "hit_ratio_mean")
+    base_st = {(s["job"], s["config"]): s
+               for s in _baseline_section(baseline, fresh, "streaming",
+                                          warnings)}
+    for s in fresh.get("streaming", []):
+        key = (s["job"], s["config"])
+        if not s.get("pipeline"):
+            failures.append(f"streaming {key}: pipeline telemetry missing")
+        b = base_st.get(key)
+        if b is None:
+            notes.append(f"streaming {key}: not in baseline "
+                         "(new run, unchecked)")
+            continue
+        if not base_ix:     # geometry mismatch cleared the comparison
+            continue
+        for k in det_st:
+            if k not in b:
+                warnings.append(
+                    f"streaming {key}: baseline entry predates '{k}' "
+                    "(older schema) — unchecked")
+            elif s.get(k) != b[k]:
+                failures.append(
+                    f"streaming {key}: deterministic counter '{k}' "
+                    f"drifted {b[k]} -> {s.get(k)}")
+        bp, sp = b.get("pipeline") or {}, s.get("pipeline") or {}
+        if bp.get("wall_s", 0) > 0 and (
+                sp.get("wall_s", 0) > bp["wall_s"] * (1 + wallclock_warn)):
+            warnings.append(
+                f"streaming {key}: wall-clock {bp['wall_s']:.2f}s -> "
+                f"{sp['wall_s']:.2f}s "
+                f"(+{100 * (sp['wall_s'] / bp['wall_s'] - 1):.0f}%)")
+        if "overlap" in bp and "overlap" in sp \
+                and sp["overlap"] < bp["overlap"] - 0.25:
+            warnings.append(
+                f"streaming {key}: overlap efficiency "
+                f"{bp['overlap']:.2f} -> {sp['overlap']:.2f}")
+
+    for key in base_st.keys() - {(s["job"], s["config"])
+                                 for s in fresh.get("streaming", [])}:
+        if base_ix:
+            failures.append(f"streaming {key}: missing from fresh run")
 
     # per-kernel roofline (ISSUE 7): oracle agreement and the
     # geometry-pure cost model (bytes moved) FAIL on regression —

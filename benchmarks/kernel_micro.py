@@ -128,6 +128,47 @@ def bench_mine(rows, roofs, rng):
               f"compares={comp/1e6:.1f}M interp={t_k*1e3:.1f}ms")
 
 
+def bench_hash_lookup(rows, roofs, rng):
+    """Prefetch-table probe vs the vmapped jnp oracle (ISSUE 9: the
+    probe joins the roofline registry alongside the fused kernels)."""
+    from repro.core.hashindex import bucket_of
+    from repro.kernels import ref
+    for (nq, nb, w, p) in [(256, 128, 4, 3), (512, 256, 4, 3)]:
+        pf_key = np.full((nb, w), -1, np.int32)
+        pf_vals = np.full((nb, w, p), -1, np.int32)
+        keys = rng.choice(100000, nb, replace=False).astype(np.int32)
+        for k in keys:
+            b = int(bucket_of(jnp.int32(int(k)), nb))
+            ways = pf_key[b]
+            if (ways == -1).any():
+                slot = int(np.argmax(ways == -1))
+                pf_key[b, slot] = k
+                pf_vals[b, slot] = np.arange(p) + k + 1
+        qs = np.concatenate([keys[: nq // 2],
+                             rng.integers(2 * 10**5, 3 * 10**5, nq - nq // 2)
+                             ]).astype(np.int32)
+        args = (jnp.array(qs), jnp.array(pf_key), jnp.array(pf_vals))
+        got = ops.prefetch_lookup(*args)
+        want = ref.hash_lookup_ref(*args)
+        ok = bool(jnp.array_equal(got, want))
+        t0 = time.time()
+        for _ in range(3):
+            ops.prefetch_lookup(*args).block_until_ready()
+        t_k = (time.time() - t0) / 3
+        shape = f"q={nq},nb={nb},w={w},p={p}"
+        rl = analyze_kernel("hash_lookup",
+                            dict(queries=nq, n_buckets=nb, ways=w, plist=p))
+        rl.geometry_label = shape
+        rows.append(["hash_lookup", shape, ok, f"{t_k*1e6:.0f}",
+                     int(rl.bytes_moved), int(rl.flops)])
+        roofs.append(rl)
+        record_kernel("hash_lookup", shape, ok, rl.to_dict(),
+                      wallclock_us=t_k * 1e6)
+        print(f"lookup q={nq} nb={nb}: match={ok} "
+              f"bytes={rl.bytes_moved / 1024:.0f}KB ai={rl.intensity:.3f} "
+              f"interp={t_k*1e6:.0f}us")
+
+
 def bench_paged(rows, roofs, rng):
     for (b, hq, hkv, hd, ps, npg) in [(4, 32, 8, 128, 16, 8),
                                       (8, 16, 4, 64, 32, 16)]:
@@ -162,6 +203,7 @@ def main():
 
     bench_record_fused(rows, roofs)
     bench_mine(rows, roofs, rng)
+    bench_hash_lookup(rows, roofs, rng)
     bench_paged(rows, roofs, rng)
 
     write_csv("kernel_micro.csv",

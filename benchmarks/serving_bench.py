@@ -9,7 +9,13 @@ from hit ratios — this job MEASURES throughput (tok/s) and step-latency
 percentiles, and splits its telemetry the way ``benchmarks.compare``
 gates it: virtual-step counters (tokens, turnaround percentiles, tier
 hit ratio) are deterministic and FAIL on drift; wall-clock numbers
-(tok/s, p50/p95/p99 step seconds) only WARN.
+(tok/s, p50/p95/p99 step seconds, host vs device-wait split) only WARN.
+
+The pipeline job (ISSUE 9) measures the async producer itself: the same
+streamed corpus through ``sweep_streaming`` with the threaded producer
+on and off, asserting bit-identity inline and recording stage timings,
+ring stall counters and overlap into the BENCH ``"streaming"`` section
+plus ``serving_<scale>_pipeline.csv``.
 
     PYTHONPATH=src python -m benchmarks.serving_bench --scale quick
 """
@@ -20,12 +26,14 @@ import argparse
 
 import numpy as np
 
+from repro.cache import SimConfig
+from repro.cache.sweep import sweep_streaming
 from repro.cache.tiered import TieredKVCache
 from repro.core import MithrilConfig
 from repro.launch.serve import TieredServeEngine
-from repro.traces import arrival_process
+from repro.traces import arrival_process, mixed
 
-from .common import record_serving, write_csv
+from .common import record_serving, record_streaming, write_csv
 
 # mine_rows must sit BELOW the distinct-page count of the workload: the
 # mining table only triggers when mine_rows distinct pages each reach
@@ -53,6 +61,20 @@ SCALES = {
                  idle_len=10, stagger=24),
 }
 PAGE = dict(page_size=8, n_kv=2, head_dim=32)
+
+# pipeline-job geometry: streamed tenants through sweep_streaming with
+# the async producer on/off. Small tables — the job measures overlap,
+# not hit ratios, and both modes share one compiled (chunk, W) runner.
+PIPE_SCALES = {
+    "quick": dict(n_streams=6, stream_len=2500, lane_width=4, chunk=256),
+    "mid": dict(n_streams=8, stream_len=6000, lane_width=4, chunk=512),
+    "full": dict(n_streams=12, stream_len=12000, lane_width=8, chunk=512),
+}
+PIPE_CFG = SimConfig(capacity=128, use_mithril=True, use_amp=True,
+                     mithril=MithrilConfig(min_support=2, max_support=6,
+                                           lookahead=30, rec_buckets=256,
+                                           rec_ways=4, mine_rows=32,
+                                           pf_buckets=256, pf_ways=4))
 
 
 def build_workload(geo: dict, seed: int = 0):
@@ -93,6 +115,56 @@ def serve(geo: dict, mithril: bool, seed: int = 0) -> dict:
     return eng.run()
 
 
+def pipeline_bench(scale: str, job: str) -> dict:
+    """Async-producer overlap measurement + inline differential check.
+
+    Runs the same streamed corpus through ``sweep_streaming`` twice —
+    synchronous fallback first, threaded pipeline second, sharing one
+    compiled runner (a warmup pass eats the compile so neither timing
+    carries it) — asserts the hit curves are bit-identical, and records
+    both runs' ``streaming_stats()`` (with deterministic
+    ``hit_ratio_mean`` folded in) for the BENCH ``"streaming"`` gate.
+    """
+    geo = PIPE_SCALES[scale]
+    traces = {f"s{i:02d}": mixed(geo["stream_len"] + 137 * i,
+                                 0.3, 0.4, 0.3, seed=40 + i)
+              for i in range(geo["n_streams"])}
+    arrivals = arrival_process(traces, mode="onoff", burst_len=64,
+                               idle_len=32, stagger=geo["chunk"], seed=7)
+    arr_list = [arrivals[k] for k in traces]
+    warm = {k: v[: geo["chunk"] * 2] for k, v in
+            list(traces.items())[:2]}
+    sweep_streaming(PIPE_CFG, warm, lane_width=geo["lane_width"],
+                    chunk=geo["chunk"], async_producer=False)
+    out = {}
+    for mode, async_on in (("sync", False), ("async", True)):
+        stream = sweep_streaming(PIPE_CFG, traces, arrivals=arr_list,
+                                 lane_width=geo["lane_width"],
+                                 chunk=geo["chunk"],
+                                 async_producer=async_on)
+        st = stream.streaming_stats()
+        st["hit_ratio_mean"] = round(
+            float(np.mean(stream.result.hit_ratios())), 6)
+        record_streaming(job, mode, st)
+        out[mode] = (stream, st)
+    if not np.array_equal(out["async"][0].result.hit_curve,
+                          out["sync"][0].result.hit_curve):
+        raise AssertionError("async producer diverged from sync replay")
+    rows = []
+    for mode, (_, st) in out.items():
+        p = st["pipeline"]
+        rows.append([mode, st["lane_width"], st["chunk"], st["n_slabs"],
+                     st["waste_ratio"], st["hit_ratio_mean"],
+                     p["produce_s"], p["consume_s"], p["drain_s"],
+                     p["wall_s"], p["producer_stalls"],
+                     p["consumer_stalls"], p["overlap"]])
+    write_csv(f"serving_{scale}_pipeline.csv",
+              "mode,lane_width,chunk,n_slabs,waste_ratio,hit_ratio_mean,"
+              "produce_s,consume_s,drain_s,wall_s,"
+              "producer_stalls,consumer_stalls,overlap", rows)
+    return {mode: st for mode, (_, st) in out.items()}
+
+
 def main(scale: str = "quick") -> str:
     geo = SCALES[scale]
     job = f"serving_{scale}"
@@ -107,17 +179,23 @@ def main(scale: str = "quick") -> str:
                      m["turnaround_steps_p95"], m["turnaround_steps_p99"],
                      m["tier"]["hit_ratio"], m["tier"]["precision"],
                      m["throughput_tok_s"], m["step_latency_s_p50"],
-                     m["step_latency_s_p95"], m["step_latency_s_p99"]])
+                     m["step_latency_s_p95"], m["step_latency_s_p99"],
+                     m["host_seconds"], m["device_wait_seconds"]])
     write_csv(f"serving_{scale}.csv",
               "config,requests,tokens,steps,mean_occupancy,"
               "turnaround_p50,turnaround_p95,turnaround_p99,"
               "tier_hit_ratio,tier_precision,tok_s,"
-              "step_s_p50,step_s_p95,step_s_p99", rows)
+              "step_s_p50,step_s_p95,step_s_p99,host_s,device_wait_s",
+              rows)
+    pipe = pipeline_bench(scale, f"pipeline_{scale}")
     lru, smart = out["lru_tier"], out["mithril_tier"]
     return (f"tok={smart['tokens']};"
             f"hit_lru={lru['tier']['hit_ratio']};"
             f"hit_mithril={smart['tier']['hit_ratio']};"
-            f"tok_s={smart['throughput_tok_s']}")
+            f"tok_s={smart['throughput_tok_s']};"
+            f"pipe_sync_s={pipe['sync']['pipeline']['wall_s']};"
+            f"pipe_async_s={pipe['async']['pipeline']['wall_s']};"
+            f"pipe_overlap={pipe['async']['pipeline']['overlap']}")
 
 
 def _parser() -> argparse.ArgumentParser:

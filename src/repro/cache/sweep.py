@@ -48,6 +48,8 @@ from __future__ import annotations
 
 import collections
 import functools
+import queue as _queue_mod
+import threading
 from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, \
     Tuple, Union
 
@@ -759,38 +761,63 @@ class _Slab(NamedTuple):
     """One staged ``(chunk, W)`` request slab plus its host-side routing.
 
     ``placements`` maps device outputs back to traces: for each lane
-    that placed requests, ``(lane, tenant, cursor0, positions)`` says
-    request ``cursor0 + k`` of ``tenant`` sits at slab row
-    ``positions[k]``. ``harvest`` lists ``(tenant, lane)`` pairs that
-    drain once this slab runs — the consumer snapshots those lanes'
+    that placed requests, ``(lane, tenant, cursor0, row0, k, positions)``
+    says requests ``cursor0 .. cursor0+k-1`` of ``tenant`` sit at slab
+    rows ``row0 .. row0+k-1`` when ``positions`` is ``None`` (the
+    contiguous fast path — offline traces always, arrival traces
+    whenever the placed run has no interior gap), else at
+    ``positions[0..k-1]``. ``harvest`` lists ``(tenant, lane)`` pairs
+    that drain once this slab runs — the consumer snapshots those lanes'
     statistics from the post-slab carry (device arrays are immutable,
-    so the snapshot is a free reference, not a copy).
+    so the snapshot is a free reference, not a copy). ``buffers`` holds
+    the host staging pair so the async drain can recycle it into the
+    producer's pool once the slab's outputs materialize (``None`` on
+    the synchronous path, where staging arrays are throwaway).
     """
 
     blocks: jax.Array                       # (chunk, W) int32, staged
     valid: jax.Array                        # (chunk, W) bool, staged
     reset: Optional[np.ndarray]             # (W,) bool; None = no admission
-    placements: Tuple[Tuple[int, int, int, np.ndarray], ...]
+    placements: Tuple[Tuple[int, int, int, int, int,
+                            Optional[np.ndarray]], ...]
     harvest: Tuple[Tuple[int, int], ...]
+    buffers: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
 
 class RingBuffer:
-    """Bounded FIFO ring of staged request slabs.
+    """Thread-safe bounded FIFO ring of staged request slabs.
 
-    The producer (the host scheduler) stages up to ``depth`` slabs ahead
-    of the consumer (the device chunk scan): ``jnp.asarray`` uploads
-    enqueue asynchronously, so slabs k+1..k+depth transfer while slab k
-    computes. Admission and placement depend only on host-known cursors
-    — never on device results — which is what makes the produce-ahead
-    legal; the depth bounds in-flight device memory at
-    ``depth * chunk * W`` request slots.
+    The producer (the host scheduler, its own thread under
+    ``async_producer=True``) stages up to ``depth`` slabs ahead of the
+    consumer (the device chunk scan): host marshalling and H2D staging
+    of slabs k+1..k+depth overlap slab k's compute. Admission and
+    placement depend only on host-known cursors — never on device
+    results — which is what makes the produce-ahead legal; the depth
+    bounds in-flight device memory at ``depth * chunk * W`` request
+    slots.
+
+    ``push``/``pop`` default to the non-blocking semantics the
+    synchronous engine uses (full push / empty pop raise a clear
+    ``RuntimeError``); ``block=True`` waits on a condition variable
+    instead and counts each wait in the stall telemetry: a producer
+    that blocked on a full ring bumps ``push_stalls`` (device is the
+    bottleneck), a consumer that blocked on an empty ring bumps
+    ``pop_stalls`` (host marshalling is the bottleneck). ``close()``
+    wakes every waiter; a blocking pop on a closed, drained ring
+    returns ``None`` (end of stream).
     """
 
     def __init__(self, depth: int = DEFAULT_RING_DEPTH):
-        if depth < 1:
-            raise ValueError(f"ring depth must be >= 1, got {depth}")
-        self.depth = depth
+        if isinstance(depth, bool) or not isinstance(
+                depth, (int, np.integer)) or depth < 1:
+            raise ValueError(f"ring depth must be an int >= 1, "
+                             f"got {depth!r}")
+        self.depth = int(depth)
         self._q: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self.push_stalls = 0    # producer waited on a full ring
+        self.pop_stalls = 0     # consumer waited on an empty ring
 
     def __len__(self) -> int:
         return len(self._q)
@@ -803,13 +830,45 @@ class RingBuffer:
     def empty(self) -> bool:
         return not self._q
 
-    def push(self, slab: _Slab) -> None:
-        if self.full:
-            raise RuntimeError("ring buffer full — pop before pushing")
-        self._q.append(slab)
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
-    def pop(self) -> _Slab:
-        return self._q.popleft()
+    def close(self) -> None:
+        """End of stream: wake all waiters; further pushes are errors."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def push(self, slab: _Slab, block: bool = False) -> None:
+        with self._cv:
+            if len(self._q) >= self.depth:
+                if not block:
+                    raise RuntimeError(
+                        "ring buffer full — pop before pushing")
+                self.push_stalls += 1
+                while len(self._q) >= self.depth and not self._closed:
+                    self._cv.wait()
+            if self._closed:
+                raise RuntimeError("ring buffer closed")
+            self._q.append(slab)
+            self._cv.notify_all()
+
+    def pop(self, block: bool = False) -> Optional[_Slab]:
+        with self._cv:
+            if not self._q:
+                if not block:
+                    raise RuntimeError(
+                        "ring buffer empty — push (produce) before popping")
+                if not self._closed:
+                    self.pop_stalls += 1
+                    while not self._q and not self._closed:
+                        self._cv.wait()
+            if not self._q:
+                return None         # closed and fully drained
+            slab = self._q.popleft()
+            self._cv.notify_all()
+            return slab
 
 
 @jax.jit
@@ -835,12 +894,27 @@ class StreamResult(NamedTuple):
     arrival gaps are all invisible under the §6 masking contract).
     ``lane_steps`` is the executed (lane x request) slot count — the
     recycling analogue of ``SweepPlan.padded_lane_steps``.
+
+    ``pipeline`` carries the producer-pipeline telemetry: stage-busy
+    seconds (``produce_s`` host marshalling + H2D staging,
+    ``consume_s`` reset + chunk-scan dispatch, ``drain_s`` D2H
+    materialization + hit-curve scatter), the loop wall clock
+    ``wall_s``, the ring-buffer stall counters (``producer_stalls`` =
+    producer blocked on a full ring, ``consumer_stalls`` = consumer
+    blocked on an empty ring) and ``overlap`` = ``1 - wall / sum of
+    stage-busy`` clipped to [0, 1] — 0 when the stages serialize,
+    approaching ``1 - 1/n_stages`` when they fully overlap. Timings
+    and stalls are scheduling noise (WARN-gated in
+    ``benchmarks.compare``); every other ``streaming_stats`` key is
+    deterministic and FAIL-gated.
     """
 
     result: SweepResult
     lane_width: int
     chunk: int
     n_slabs: int
+    async_producer: bool = True
+    pipeline: Optional[Dict[str, object]] = None
 
     @property
     def lane_steps(self) -> int:
@@ -850,14 +924,18 @@ class StreamResult(NamedTuple):
         """Schedule-efficiency summary recorded in BENCH json."""
         total = int(np.asarray(self.result.lengths).sum())
         steps = self.lane_steps
-        return {
+        stats: Dict[str, object] = {
             "lane_width": self.lane_width,
             "chunk": self.chunk,
             "n_slabs": self.n_slabs,
             "lane_steps": int(steps),
             "ideal_lane_steps": total,
             "waste_ratio": round(1.0 - total / steps, 6) if steps else 0.0,
+            "async_producer": bool(self.async_producer),
         }
+        if self.pipeline is not None:
+            stats["pipeline"] = dict(self.pipeline)
+        return stats
 
 
 def sweep_streaming(cfg: SimConfig,
@@ -869,7 +947,8 @@ def sweep_streaming(cfg: SimConfig,
                     lane_width: Optional[int] = None,
                     chunk: int = DEFAULT_CHUNK, unroll: int = 1,
                     shard: Optional[bool] = None,
-                    ring_depth: int = DEFAULT_RING_DEPTH) -> StreamResult:
+                    ring_depth: int = DEFAULT_RING_DEPTH,
+                    async_producer: bool = True) -> StreamResult:
     """Online ingestion: arrival is the primitive, traces stream through
     a recycled lane pool (DESIGN.md §10).
 
@@ -893,10 +972,33 @@ def sweep_streaming(cfg: SimConfig,
     per-lane ``need`` (§7), so neither lane assignment, chunk phase,
     arrival gaps nor pool composition can leak between traces
     (``tests/test_streaming.py`` pins this).
+
+    ``async_producer=True`` (the default) runs the host scheduler on a
+    background thread: slab marshalling into a recycled pool of
+    preallocated staging buffers plus non-blocking ``jax.device_put``
+    H2D uploads overlap the device chunk scan, and a drain thread
+    materializes each slab's hit rows off-device as they complete (so
+    host memory stays bounded and D2H overlaps compute). Production
+    order depends only on host-known cursors, so the async pipeline is
+    bit-identical to the synchronous fallback (``async_producer=False``
+    — the legacy produce/consume loop, pinned by
+    ``tests/test_async_pipeline.py``). Stage timings, ring stall
+    counters and the overlap ratio surface in
+    :meth:`StreamResult.streaming_stats` under ``"pipeline"``.
     """
     import time
 
     t0 = time.time()
+    if isinstance(async_producer, np.bool_):
+        async_producer = bool(async_producer)
+    if not isinstance(async_producer, bool):
+        raise ValueError(f"async_producer must be a bool, "
+                         f"got {async_producer!r}")
+    if isinstance(ring_depth, bool) or not isinstance(
+            ring_depth, (int, np.integer)) or ring_depth < 1:
+        raise ValueError(f"ring_depth must be an int >= 1, "
+                         f"got {ring_depth!r}")
+    ring_depth = int(ring_depth)
     if not isinstance(traces, np.ndarray):
         if lengths is not None:
             raise ValueError("pass lengths only with a (B, T) block array"
@@ -959,8 +1061,47 @@ def sweep_streaming(cfg: SimConfig,
     # tenant -> (stats pytree reference, lane) snapshotted at drain time
     stash: List[Optional[Tuple[Stats, int]]] = [None] * n
 
+    # --- staging: how host slab arrays become device arrays ------------
+    # Sync keeps the legacy throwaway jnp.asarray staging bit for bit.
+    # Async marshals into a recycled pool of preallocated buffer pairs
+    # (the drain recycles a pair only after the slab's outputs
+    # materialize — by then the chunk scan has consumed the upload, so
+    # reuse is safe even if the CPU backend aliased the host buffer)
+    # and uploads with non-blocking jax.device_put: plain on one device
+    # (same avals + default sharding as jnp.asarray, so no extra
+    # executable), pre-sharded per ring_specs on a mesh (ring_put) so
+    # the shard_map consumer skips the dispatch-time reshard.
+    if async_producer:
+        pool: _queue_mod.Queue = _queue_mod.Queue()
+        for _ in range(ring_depth + 3):
+            pool.put((np.zeros((chunk, w), np.int32),
+                      np.zeros((chunk, w), bool)))
+
+        def alloc():
+            b, v = pool.get()
+            b.fill(0)
+            v.fill(False)
+            return b, v
+
+        if n_shards > 1:
+            def stage(b, v):
+                return dist_sharding.ring_put((b, v), mesh, axis=LANE_AXIS)
+        else:
+            def stage(b, v):
+                return jax.device_put((b, v))
+    else:
+        def alloc():
+            return (np.zeros((chunk, w), np.int32),
+                    np.zeros((chunk, w), bool))
+
+        def stage(b, v):
+            return jnp.asarray(b), jnp.asarray(v)
+
+    timers = {"produce_s": 0.0, "consume_s": 0.0, "drain_s": 0.0}
+
     def produce() -> Optional[_Slab]:
         nonlocal clock
+        tp = time.perf_counter()
         while True:
             t_start = clock
             reset = np.zeros((w,), bool)
@@ -985,13 +1126,13 @@ def sweep_streaming(cfg: SimConfig,
             if any(la is not None for la in lanes):
                 break
             if not queue:
+                timers["produce_s"] += time.perf_counter() - tp
                 return None     # fully drained
             # every lane idle, nothing arrived yet: fast-forward the
             # clock to the slab containing the head's first arrival
             head = tenants[queue[0]]
             clock = (int(head.avail[head.cursor]) // chunk) * chunk
-        slab_blocks = np.zeros((chunk, w), np.int32)
-        slab_valid = np.zeros((chunk, w), bool)
+        slab_blocks, slab_valid = alloc()
         placements, harvest = [], []
         for lane, ti in enumerate(lanes):
             if ti is None:
@@ -999,61 +1140,166 @@ def sweep_streaming(cfg: SimConfig,
             t = tenants[ti]
             cap = min(t.length - t.cursor, chunk)
             if t.avail is None:
-                pos = np.arange(cap)
+                # offline lanes always place a gapless run from row 0:
+                # contiguous slice writes, no index vectors built
+                row0, k, pos = 0, cap, None
             else:
                 # request k lands at slab row k + the running max of its
                 # arrival slack: in-order placement, one row per request,
                 # never before arrival — gaps stay valid=False no-ops
                 slack = (t.avail[t.cursor: t.cursor + cap] - t_start
                          - np.arange(cap))
-                pos = np.arange(cap) + np.maximum(
+                p = np.arange(cap) + np.maximum(
                     np.maximum.accumulate(slack, axis=0)
                     if cap else slack, 0)
-            pos = pos[pos < chunk]
-            k = len(pos)
+                p = p[p < chunk]
+                k = len(p)
+                if k and int(p[-1]) - int(p[0]) + 1 == k:
+                    # no interior gap: same contiguous fast path
+                    row0, pos = int(p[0]), None
+                else:
+                    row0, pos = 0, p
             if k:
-                slab_blocks[pos, lane] = t.blocks[t.cursor: t.cursor + k]
-                slab_valid[pos, lane] = True
-                placements.append((lane, ti, t.cursor, pos))
+                if pos is None:
+                    slab_blocks[row0: row0 + k, lane] = \
+                        t.blocks[t.cursor: t.cursor + k]
+                    slab_valid[row0: row0 + k, lane] = True
+                else:
+                    slab_blocks[pos, lane] = t.blocks[t.cursor: t.cursor + k]
+                    slab_valid[pos, lane] = True
+                placements.append((lane, ti, t.cursor, row0, k, pos))
                 t.cursor += k
             if t.cursor == t.length:
                 harvest.append((ti, lane))
                 lanes[lane] = None      # recycled at the next admission
         clock = t_start + chunk
-        return _Slab(jnp.asarray(slab_blocks), jnp.asarray(slab_valid),
+        dev_blocks, dev_valid = stage(slab_blocks, slab_valid)
+        timers["produce_s"] += time.perf_counter() - tp
+        return _Slab(dev_blocks, dev_valid,
                      reset if reset.any() else None,
-                     tuple(placements), tuple(harvest))
+                     tuple(placements), tuple(harvest),
+                     (slab_blocks, slab_valid) if async_producer else None)
 
-    hit_records: List[Tuple[jax.Array, Tuple]] = []
-    ring = RingBuffer(ring_depth)
-    n_slabs, producing, first_slab = 0, True, True
-    while True:
-        while producing and not ring.full:
-            slab = produce()
-            if slab is None:
-                producing = False
-                break
-            ring.push(slab)
-        if ring.empty:
-            break
-        slab = ring.pop()
-        # slab 0 skips the reset outright: the carry IS the template
-        if slab.reset is not None and not first_slab:
-            carry = _masked_reset(carry, template,
-                                  place_mask(slab.reset))
-        first_slab = False
-        carry, hits = run_chunk(carry, slab.blocks, slab.valid)
-        hit_records.append((hits, slab.placements))
-        for ti, lane in slab.harvest:
-            stash[ti] = (carry["stats"], lane)
-        n_slabs += 1
-
-    # materialize: everything device-side resolved once, at the end
     hit_curve = np.zeros((n, t_max), bool)
-    for hits, placements in hit_records:
-        h = np.asarray(hits)                    # (chunk, W)
-        for lane, ti, c0, pos in placements:
-            hit_curve[ti, c0: c0 + len(pos)] = h[pos, lane]
+
+    def scatter_hits(hits, placements) -> None:
+        h = np.asarray(hits)                    # (chunk, W); blocks on
+        for lane, ti, c0, row0, k, pos in placements:   # device results
+            if pos is None:
+                hit_curve[ti, c0: c0 + k] = h[row0: row0 + k, lane]
+            else:
+                hit_curve[ti, c0: c0 + k] = h[pos, lane]
+
+    ring = RingBuffer(ring_depth)
+    n_slabs, first_slab = 0, True
+    t_wall = time.perf_counter()
+
+    if async_producer:
+        # three-stage pipeline: producer thread marshals + stages,
+        # the calling thread dispatches the chunk scans in ring order
+        # (same order the sync loop runs them — bit-identity is by
+        # construction), a drain thread materializes hit rows as each
+        # slab's compute completes and recycles its staging buffers
+        prod_err: List[BaseException] = []
+        drain_err: List[BaseException] = []
+        drain_q: _queue_mod.Queue = _queue_mod.Queue(maxsize=ring_depth + 2)
+
+        def producer_main():
+            try:
+                while True:
+                    slab = produce()
+                    if slab is None:
+                        break
+                    ring.push(slab, block=True)
+            except BaseException as e:  # noqa: BLE001 — surfaced below
+                prod_err.append(e)
+            finally:
+                ring.close()
+
+        def drain_main():
+            while True:
+                item = drain_q.get()
+                if item is None:
+                    return
+                hits, placements, bufs = item
+                td = time.perf_counter()
+                try:
+                    if not drain_err:
+                        scatter_hits(hits, placements)
+                except BaseException as e:  # noqa: BLE001
+                    drain_err.append(e)     # keep draining: never block
+                finally:                    # the consumer on a dead drain
+                    timers["drain_s"] += time.perf_counter() - td
+                    if bufs is not None:
+                        pool.put(bufs)
+
+        producer = threading.Thread(target=producer_main, daemon=True,
+                                    name="sweep-producer")
+        drainer = threading.Thread(target=drain_main, daemon=True,
+                                   name="sweep-drain")
+        producer.start()
+        drainer.start()
+        try:
+            while True:
+                slab = ring.pop(block=True)
+                if slab is None:
+                    break
+                tc = time.perf_counter()
+                # slab 0 skips the reset outright: carry IS the template
+                if slab.reset is not None and not first_slab:
+                    carry = _masked_reset(carry, template,
+                                          place_mask(slab.reset))
+                first_slab = False
+                carry, hits = run_chunk(carry, slab.blocks, slab.valid)
+                for ti, lane in slab.harvest:
+                    stash[ti] = (carry["stats"], lane)
+                n_slabs += 1
+                timers["consume_s"] += time.perf_counter() - tc
+                drain_q.put((hits, slab.placements, slab.buffers))
+        finally:
+            ring.close()        # unblocks a producer stuck mid-push
+            drain_q.put(None)
+            drainer.join()
+            producer.join()
+        if prod_err:
+            raise prod_err[0]
+        if drain_err:
+            raise drain_err[0]
+    else:
+        # synchronous fallback: the legacy single-thread loop — fill the
+        # ring, run one slab, materialize every hit record at the end
+        hit_records: List[Tuple[jax.Array, Tuple]] = []
+        producing = True
+        while True:
+            while producing and not ring.full:
+                slab = produce()
+                if slab is None:
+                    producing = False
+                    break
+                ring.push(slab)
+            if ring.empty:
+                break
+            slab = ring.pop()
+            tc = time.perf_counter()
+            # slab 0 skips the reset outright: the carry IS the template
+            if slab.reset is not None and not first_slab:
+                carry = _masked_reset(carry, template,
+                                      place_mask(slab.reset))
+            first_slab = False
+            carry, hits = run_chunk(carry, slab.blocks, slab.valid)
+            hit_records.append((hits, slab.placements))
+            for ti, lane in slab.harvest:
+                stash[ti] = (carry["stats"], lane)
+            n_slabs += 1
+            timers["consume_s"] += time.perf_counter() - tc
+
+        # materialize: everything device-side resolved once, at the end
+        td = time.perf_counter()
+        for hits, placements in hit_records:
+            scatter_hits(hits, placements)
+        timers["drain_s"] += time.perf_counter() - td
+
+    wall_s = time.perf_counter() - t_wall
     mat: Dict[int, list] = {}
     rows = []
     for ti in range(n):
@@ -1064,9 +1310,20 @@ def sweep_streaming(cfg: SimConfig,
     stats = Stats(*(np.stack([r[j] for r in rows])
                     for j in range(len(Stats._fields))))
 
+    busy = timers["produce_s"] + timers["consume_s"] + timers["drain_s"]
+    pipeline = {
+        "produce_s": round(timers["produce_s"], 4),
+        "consume_s": round(timers["consume_s"], 4),
+        "drain_s": round(timers["drain_s"], 4),
+        "wall_s": round(wall_s, 4),
+        "producer_stalls": int(ring.push_stalls),
+        "consumer_stalls": int(ring.pop_stalls),
+        "overlap": round(max(0.0, 1.0 - wall_s / busy), 4) if busy else 0.0,
+    }
     after = compile_count(cfg, unroll, n_shards)
     result = SweepResult(stats=stats, hit_curve=hit_curve, lengths=lengths,
                          compiles=(after - before if before >= 0 else -1),
                          seconds=time.time() - t0)
     return StreamResult(result=result, lane_width=w, chunk=chunk,
-                        n_slabs=n_slabs)
+                        n_slabs=n_slabs, async_producer=async_producer,
+                        pipeline=pipeline)

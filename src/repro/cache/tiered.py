@@ -176,26 +176,23 @@ class TieredKVCache:
                                 ptab, lengths)
         return out[0]
 
-    def attend_batch(self, q: jax.Array, page_lists: List[np.ndarray],
-                     lengths: np.ndarray) -> jax.Array:
-        """One continuous-batch decode step: flash-decode every scheduled
-        request over its pages in a single kernel launch.
+    def demand_batch(self, page_lists: List[np.ndarray]) -> np.ndarray:
+        """Host half of a continuous-batch step: demand residency for
+        every request's pages and return the settled slot table.
 
-        q: (B, Hq, hd); ``page_lists[i]`` are request i's page ids
-        (ragged — tables are zero-padded to the widest request, with
-        ``lengths`` masking the tail inside the kernel). Residency is
-        demanded request by request IN ORDER (each a recordable MITHRIL
-        access event — the interleaving across co-scheduled requests is
+        ``page_lists[i]`` are request i's page ids (ragged — the table
+        is zero-padded to the widest request). Residency is demanded
+        request by request IN ORDER (each a recordable MITHRIL access
+        event — the interleaving across co-scheduled requests is
         exactly what mining feeds on); a later request's install may
         evict an earlier one's page mid-batch, so a pin pass re-installs
-        any batch page lost that way before the launch. Re-installs
-        count as ``bytes_moved`` (they are real copies) but not as
-        accesses — the demand stream saw each page exactly once.
-        The whole batch must fit the HBM pool.
+        any batch page lost that way before returning. Re-installs count
+        as ``bytes_moved`` (they are real copies) but not as accesses —
+        the demand stream saw each page exactly once. The whole batch
+        must fit the HBM pool. Pure host work mutating only tier state:
+        the serving engine runs it for batch k+1 while batch k's
+        :meth:`decode_batch` launch still computes.
         """
-        if len(page_lists) != q.shape[0]:
-            raise ValueError(f"need one page list per query, got "
-                             f"{len(page_lists)} for batch {q.shape[0]}")
         n_batch_pages = sum(len(p) for p in page_lists)
         if n_batch_pages > self.n_hbm_slots:
             raise ValueError(f"batch demands {n_batch_pages} pages but the"
@@ -227,8 +224,35 @@ class TieredKVCache:
         tab = np.zeros((len(page_lists), width), np.int64)
         for i, pages in enumerate(page_lists):
             tab[i, : len(pages)] = [self.page_slot[int(p)] for p in pages]
+        return tab
+
+    def decode_batch(self, q: jax.Array, tab: np.ndarray,
+                     lengths: np.ndarray) -> jax.Array:
+        """Device half: flash-decode the whole batch over its settled
+        slot table in a single kernel launch. Dispatch is asynchronous —
+        callers that can tolerate one launch in flight overlap the next
+        batch's host marshalling (admission, page tables, query draw)
+        with this compute, but must block on the in-flight output before
+        the next :meth:`demand_batch` mutates the pools: a zero-copy
+        backend may alias the host pool buffers into the launch, so
+        host-side installs are only safe once the launch retires."""
         return kops.paged_decode(q.astype(jnp.float32),
                                  jnp.asarray(self.hbm_k),
                                  jnp.asarray(self.hbm_v),
                                  jnp.asarray(tab, jnp.int32),
                                  jnp.asarray(lengths, jnp.int32))
+
+    def attend_batch(self, q: jax.Array, page_lists: List[np.ndarray],
+                     lengths: np.ndarray) -> jax.Array:
+        """One continuous-batch decode step: :meth:`demand_batch` then
+        :meth:`decode_batch` back to back.
+
+        q: (B, Hq, hd); ``lengths`` masks each request's padded tail
+        inside the kernel. See the two halves for the residency and
+        launch contracts.
+        """
+        if len(page_lists) != q.shape[0]:
+            raise ValueError(f"need one page list per query, got "
+                             f"{len(page_lists)} for batch {q.shape[0]}")
+        tab = self.demand_batch(page_lists)
+        return self.decode_batch(q, tab, lengths)

@@ -235,3 +235,20 @@ def to_named(specs, mesh):
     """Map a PartitionSpec pytree to NamedShardings on a REAL mesh."""
     return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def ring_put(tree, mesh, axis: str = "lanes"):
+    """Stage host slab buffers onto the mesh pre-sharded per
+    :func:`ring_specs` (lane axis LAST, time replicated).
+
+    The streaming engine's async producer uses this instead of a plain
+    ``jax.device_put``: the upload dispatches without blocking AND each
+    device receives only its own lane slice, so the ``shard_map``
+    consumer skips the dispatch-time reshard a replicated slab would
+    pay. Values are unchanged — sharding is layout, not data — which is
+    what keeps the async sharded path bit-identical to the synchronous
+    one (``tests/test_async_pipeline.py`` pins this on a forced
+    multi-device CPU).
+    """
+    return jax.device_put(tree, to_named(ring_specs(tree, mesh, axis),
+                                         mesh))

@@ -381,6 +381,20 @@ def _mine_batched_cost(g: dict):
     return float(bytes_), float(flops)
 
 
+def _hash_lookup_cost(g: dict):
+    """One ``hash_lookup`` prefetch-table probe launch: the whole
+    set-associative prefetch table (keys + P-wide candidate rows)
+    streams into VMEM once per launch — every grid block reads it whole
+    — plus the query block in and the candidate lists out; compute is
+    the mix32 hash, the W-way compare/argmax and the P-wide found
+    select per query."""
+    q, nb = g["queries"], g["n_buckets"]
+    w, p = g["ways"], g["plist"]
+    bytes_ = (nb * w * (1 + p) + q * (1 + p)) * 4
+    flops = q * (8.0 + 4 * w + 2 * p)
+    return float(bytes_), float(flops)
+
+
 def _paged_decode_cost(g: dict):
     """One ``paged_decode`` step: the whole paged KV working set is
     read once (decode is bandwidth-bound), q in / o out; compute is the
@@ -397,6 +411,7 @@ def _paged_decode_cost(g: dict):
 KERNEL_MODELS = {
     "mithril_record_fused": _record_fused_cost,
     "mithril_mine_batched": _mine_batched_cost,
+    "hash_lookup": _hash_lookup_cost,
     "paged_decode": _paged_decode_cost,
 }
 

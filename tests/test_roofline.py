@@ -21,6 +21,7 @@ GEOMS = {
                                  mine_rows=16, s_sup=4),
     "mithril_mine_batched": dict(lanes=2, mine_rows=256, s_sup=8,
                                  window=32),
+    "hash_lookup": dict(queries=256, n_buckets=128, ways=4, plist=3),
     "paged_decode": dict(batch=4, heads_q=32, heads_kv=8, head_dim=128,
                          page_size=16, n_pages=8),
 }
