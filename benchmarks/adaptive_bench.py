@@ -48,10 +48,11 @@ def _crc(history) -> str:
     return f"{zlib.crc32(repr(history).encode()):08x}"
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
-    run = corpus_run(scale, trace_len)
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
     base_cfg = run.config(BASE)
-    job = f"adaptive_{scale}"
+    job = run.job_name(f"adaptive_{scale}")
 
     searchers = {
         "hill-climb": lambda: hill_climb(base_cfg, run.blocks,
@@ -149,4 +150,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

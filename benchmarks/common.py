@@ -10,7 +10,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -42,6 +42,18 @@ def configs(capacity: int = CAPACITY) -> Dict[str, SimConfig]:
                   mithril=SUITE_MITHRIL),
     ]
     return {cfg.label(): cfg for cfg in grid}
+
+
+def job_tag(job: str, corpus: Optional[str]) -> str:
+    """BENCH job key for a corpus-parameterized job.
+
+    Bare ``job`` on the synthetic registry; ``job@<fingerprint>`` on an
+    ingested corpus (``traces.io.corpus_fingerprint``). Distinct keys
+    per trace population mean ``benchmarks.compare`` reports real-corpus
+    entries as new/unchecked instead of cross-comparing their hit ratios
+    against synthetic baselines at the same job name.
+    """
+    return f"{job}@{corpus}" if corpus and corpus != "synthetic" else job
 
 
 def pf_src_of(cfg: SimConfig) -> int:

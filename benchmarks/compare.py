@@ -104,8 +104,16 @@ def compare(fresh: dict, baseline: dict, wallclock_warn: float):
     fresh_meta, base_meta = fresh.get("meta", {}), baseline.get("meta", {})
     # keys present in BOTH metas must agree; n_traces (legacy synthetic
     # suite width) was dropped from fresh metas in ISSUE 5 — old
-    # baselines that still carry it are compared on the live keys only
-    geometry = ("quick", "trace_len", "corpus_scale", "corpus_len")
+    # baselines that still carry it are compared on the live keys only.
+    # "corpus" (the ingested-corpus fingerprint, ISSUE 10) defaults to
+    # "synthetic" on BOTH sides so a real-corpus run vs a pre-ISSUE-10
+    # baseline still registers as a geometry change and skips cleanly.
+    fresh_meta = dict(fresh_meta,
+                      corpus=fresh_meta.get("corpus", "synthetic"))
+    base_meta = dict(base_meta,
+                     corpus=base_meta.get("corpus", "synthetic"))
+    geometry = ("quick", "trace_len", "corpus_scale", "corpus_len",
+                "corpus")
     if any(k in fresh_meta and k in base_meta
            and fresh_meta[k] != base_meta[k] for k in geometry):
         notes.append(

@@ -26,6 +26,15 @@ Scales follow the corpus registry: ``quick`` (16) ⊂ ``mid`` (64) ⊂
 on the nested quick slice at every suite so their config grids stay
 affordable, while the population figures (table1/fig34/fig5/fig9) use
 the suite's full slice.
+
+**Real-corpus drop-in (DESIGN.md §13):** every driver takes
+``--corpus-dir`` (or the ``REPRO_CORPUS_DIR`` env var) naming an
+ingested corpus directory (``traces.io.ingest_to_dir``); the engine
+then builds its bundle from :class:`~repro.traces.RealCorpus` instead
+of the synthetic registry — same packer schedule, same scheduler, same
+CSV schemas — and suffixes every BENCH job key with the corpus
+fingerprint so ``benchmarks.compare`` skips cleanly across different
+trace populations.
 """
 
 from __future__ import annotations
@@ -36,11 +45,12 @@ from typing import Dict, List, Mapping, Optional
 import numpy as np
 
 from repro.cache import SimConfig, SweepResult, plan_sweep, sweep_scheduled
-from repro.traces import (FAMILIES, SCALES, build_corpus, corpus_specs,
-                          family_of)
+from repro.traces import (FAMILIES, SCALES, RealCorpus, build_corpus,
+                          corpus_specs, family_of, resolve_corpus_dir)
 from repro.traces.synthetic import stack_padded
 
-from .common import CAPACITY, configs, record_packer, record_sweep, write_csv
+from .common import (CAPACITY, configs, job_tag, record_packer,
+                     record_sweep, write_csv)
 
 # nominal per-trace request counts per suite (same geometry the
 # benchmark harness pins in run.py / compare.py baselines)
@@ -62,18 +72,32 @@ class CorpusRun:
     """
 
     def __init__(self, scale: str, trace_len: Optional[int] = None,
-                 capacity: int = CAPACITY):
+                 capacity: int = CAPACITY,
+                 corpus_dir: Optional[str] = None):
         self.scale = scale
         self.trace_len = trace_len or DEFAULT_LEN[scale]
         self.capacity = capacity
+        self.corpus_dir = resolve_corpus_dir(corpus_dir)
         (self.names, self.blocks, self.lengths, self.families,
-         self.degenerate, self.plan) = _corpus_bundle(scale,
-                                                      self.trace_len)
-        self.job = f"corpus_figures_{scale}"
-        record_packer(f"corpus_{scale}", self.plan, scale, self.trace_len)
+         self.degenerate, self.plan,
+         self.fingerprint) = _corpus_bundle(scale, self.trace_len,
+                                            self.corpus_dir)
+        self.job = self.job_name(f"corpus_figures_{scale}")
+        record_packer(self.job_name(f"corpus_{scale}"), self.plan,
+                      scale, self.trace_len)
         self._configs = configs(capacity)
         self._results: Dict[SimConfig, SweepResult] = {}
         self._recorded: set = set()
+
+    @property
+    def corpus(self) -> str:
+        """BENCH meta value: the fingerprint, or ``"synthetic"``."""
+        return self.fingerprint or "synthetic"
+
+    def job_name(self, base: str) -> str:
+        """Job key for a driver sharing this run's corpus: tagged with
+        the corpus fingerprint on ingested traces, bare on synthetic."""
+        return job_tag(base, self.fingerprint)
 
     @property
     def n_traces(self) -> int:
@@ -121,28 +145,45 @@ _RUNS: Dict[tuple, CorpusRun] = {}
 _BUNDLES: Dict[tuple, tuple] = {}
 
 
-def _corpus_bundle(scale: str, trace_len: int) -> tuple:
-    """Traces/metadata/plan per (scale, trace_len) — capacity-agnostic,
-    so the fig6 capacity grid shares one generated corpus instead of
-    rebuilding the slice per capacity."""
-    key = (scale, trace_len)
+def _corpus_bundle(scale: str, trace_len: int,
+                   corpus_dir: Optional[str] = None) -> tuple:
+    """Traces/metadata/plan per (scale, trace_len, corpus) —
+    capacity-agnostic, so the fig6 capacity grid shares one corpus
+    slice instead of rebuilding it per capacity.
+
+    Synthetic (``corpus_dir=None``): generate the registry slice,
+    fingerprint ``None``. Ingested: load the :class:`RealCorpus`,
+    subset/cap it through the same nested-scale rule, families from
+    the manifest, fingerprint of the sampled content.
+    """
+    key = (scale, trace_len, corpus_dir)
     if key not in _BUNDLES:
-        specs = corpus_specs(trace_len, scale)
-        names, blocks, lengths = stack_padded(build_corpus(specs))
-        names = list(names)
-        _BUNDLES[key] = (names, blocks, lengths,
-                         np.array([family_of(n) for n in names]),
+        if corpus_dir:
+            rc = RealCorpus(corpus_dir)
+            names, blocks, lengths = rc.suite(scale, trace_len)
+            names = list(names)
+            families = np.array([rc.family(n) for n in names])
+            fingerprint = rc.fingerprint(scale, trace_len)
+        else:
+            specs = corpus_specs(trace_len, scale)
+            names, blocks, lengths = stack_padded(build_corpus(specs))
+            names = list(names)
+            families = np.array([family_of(n) for n in names])
+            fingerprint = None
+        _BUNDLES[key] = (names, blocks, lengths, families,
                          np.asarray(lengths) <= 1,
-                         plan_sweep(lengths))
+                         plan_sweep(lengths), fingerprint)
     return _BUNDLES[key]
 
 
 def corpus_run(scale: str, trace_len: Optional[int] = None,
-               capacity: int = CAPACITY) -> CorpusRun:
+               capacity: int = CAPACITY,
+               corpus_dir: Optional[str] = None) -> CorpusRun:
     """Process-wide memoized :class:`CorpusRun` per corpus geometry."""
-    key = (scale, trace_len or DEFAULT_LEN[scale], capacity)
+    corpus_dir = resolve_corpus_dir(corpus_dir)
+    key = (scale, trace_len or DEFAULT_LEN[scale], capacity, corpus_dir)
     if key not in _RUNS:
-        _RUNS[key] = CorpusRun(scale, trace_len, capacity)
+        _RUNS[key] = CorpusRun(scale, trace_len, capacity, corpus_dir)
     return _RUNS[key]
 
 
@@ -160,9 +201,12 @@ def family_rows(families, columns: Mapping[str, np.ndarray]) -> List[list]:
     """Per-family means of each column, plus an ``all`` aggregate row.
 
     Rows are ``[family, n, mean(col) ...]`` in registry family order
-    (families with no traces at this scale are omitted); NaN entries
-    (e.g. precision of a config that never prefetched) are excluded
-    from means and an all-NaN mean reports empty.
+    (families with no traces at this scale are omitted), followed by
+    any non-registry families present — ``ingested`` volumes and
+    manifest-labeled real traces surface as their own rows instead of
+    being dropped; NaN entries (e.g. precision of a config that never
+    prefetched) are excluded from means and an all-NaN mean reports
+    empty.
     """
     families = np.asarray(families)
     cols = {k: np.asarray(v, np.float64) for k, v in columns.items()}
@@ -171,8 +215,9 @@ def family_rows(families, columns: Mapping[str, np.ndarray]) -> List[list]:
         return ("" if np.isnan(v).all()
                 else round(float(np.nanmean(v)), 6))
 
+    extras = sorted(set(families.tolist()) - set(FAMILIES))
     rows = []
-    for fam in FAMILIES:
+    for fam in list(FAMILIES) + extras:
         m = families == fam
         if m.any():
             rows.append([fam, int(m.sum())]
@@ -224,7 +269,8 @@ IMPROVEMENT_HEADER = ("algorithm,avg_improvement,max_improvement,"
 
 
 def figure_parser(doc: Optional[str]) -> argparse.ArgumentParser:
-    """The uniform figure-driver CLI: ``--scale`` + ``--trace-len``.
+    """The uniform figure-driver CLI: ``--scale``/``--trace-len``/
+    ``--corpus-dir``.
 
     ``tests/test_results_doc.py`` parses every command documented in
     RESULTS.md through the owning driver's ``_parser()``, so drivers
@@ -236,5 +282,11 @@ def figure_parser(doc: Optional[str]) -> argparse.ArgumentParser:
                     help="corpus registry scale (quick=16, mid=64, "
                          "full=135 traces)")
     ap.add_argument("--trace-len", type=int, default=None,
-                    help="nominal requests per trace (default per scale)")
+                    help="nominal requests per trace (default per "
+                         "scale; a length CAP on ingested traces)")
+    ap.add_argument("--corpus-dir", default=None,
+                    help="ingested corpus directory (traces.io"
+                         ".ingest_to_dir) to run on instead of the "
+                         "synthetic registry; REPRO_CORPUS_DIR env "
+                         "var works too")
     return ap

@@ -26,9 +26,10 @@ from .corpus_figures import (IMPROVEMENT_HEADER, corpus_run, figure_parser,
 NAMES = ["lru", "mithril-lru", "pg-lru", "mithril-amp-lru"]
 
 
-def main(scale: str = "quick", trace_len: int | None = None) -> str:
-    run = corpus_run(scale, trace_len)
-    job = f"corpus_{scale}"
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None) -> str:
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
+    job = run.job_name(f"corpus_{scale}")
     n_degenerate = int(run.degenerate.sum())
     print(f"  [{job}] {run.n_traces} traces (len {run.lengths.min()}..."
           f"{run.lengths.max()}), {len(run.plan.groups)} groups, "
@@ -70,4 +71,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    print(main(a.scale, a.trace_len))
+    print(main(a.scale, a.trace_len, a.corpus_dir))

@@ -30,8 +30,9 @@ def _pearson(a, b) -> float:
     return float(np.corrcoef(a, b)[0, 1])
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
-    run = corpus_run(scale, trace_len)
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
     hrs = run.hit_ratios(NAMES)
 
     rows = [[run.names[i], run.families[i], int(run.lengths[i]),
@@ -68,4 +69,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

@@ -45,8 +45,9 @@ def select_representatives(gain: np.ndarray, per_regime: int = 2):
     return out
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
-    run = corpus_run(scale, trace_len)
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
     hrs = run.hit_ratios(NAMES)
     gain = hrs["mithril-lru"] - hrs["lru"]
 
@@ -70,4 +71,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

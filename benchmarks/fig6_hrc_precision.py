@@ -25,14 +25,17 @@ NAMES = ("lru", "pg-lru", "mithril-lru")
 JOB = "fig6_hrc_precision"
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
     # nested quick slice at the suite's trace length (scales nest, so
     # these 16 workloads exist unchanged at mid/full)
     tlen = trace_len or DEFAULT_LEN[scale]
     rows, fam_rows = [], []
     for cap in SIZES:
-        run = corpus_run("quick", tlen, capacity=cap)
-        res = {c: run.extra_result(run.config(c), f"{c}@{cap}", JOB)
+        run = corpus_run("quick", tlen, capacity=cap,
+                         corpus_dir=corpus_dir)
+        res = {c: run.extra_result(run.config(c), f"{c}@{cap}",
+                                   run.job_name(JOB))
                for c in NAMES}
         hr = {c: r.hit_ratios() for c, r in res.items()}
         prec = {"pg-lru": res["pg-lru"].precisions(PF_PG),
@@ -60,4 +63,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

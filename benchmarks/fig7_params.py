@@ -57,14 +57,16 @@ def param_grid() -> dict:
     return grid
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
     # nested quick slice at the suite's trace length (scales nest)
-    run = corpus_run("quick", trace_len or DEFAULT_LEN[scale])
+    run = corpus_run("quick", trace_len or DEFAULT_LEN[scale],
+                     corpus_dir=corpus_dir)
     grid = param_grid()
 
     rows, fam_rows = [], []
     for (param, value), cfg in grid.items():
-        r = run.extra_result(cfg, f"{param}={value}", JOB)
+        r = run.extra_result(cfg, f"{param}={value}", run.job_name(JOB))
         hr, prec = r.hit_ratios(), r.precisions(PF_MITHRIL)
         rows.append([param, value, f"{float(np.mean(hr)):.4f}",
                      f"{float(np.nanmean(prec)):.4f}"])
@@ -86,4 +88,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

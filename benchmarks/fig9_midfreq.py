@@ -54,8 +54,9 @@ def _band_totals(run, res):
     return acc
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
-    run = corpus_run(scale, trace_len)
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
     res = run.results(NAMES)
     acc = _band_totals(run, res)
 
@@ -119,4 +120,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

@@ -43,6 +43,11 @@ def _parser() -> argparse.ArgumentParser:
                     help="benchmark geometry (default: mid)")
     ap.add_argument("--quick", action="store_true",
                     help="alias for --suite quick (CI-speed)")
+    ap.add_argument("--corpus-dir", default=None,
+                    help="run the corpus-backed jobs on an ingested "
+                         "trace directory (traces.io.ingest_to_dir) "
+                         "instead of the synthetic registry; "
+                         "REPRO_CORPUS_DIR env var works too")
     return ap
 
 
@@ -55,6 +60,9 @@ def main(argv=None) -> None:
     geo = SUITES[suite]
     scale, tlen = geo["corpus_scale"], geo["trace_len"]
 
+    from repro.traces import resolve_corpus_dir
+    cdir = resolve_corpus_dir(a.corpus_dir)
+
     from . import (adaptive_bench, common, corpus_figures, corpus_sweep,
                    expert_prefetch, fig5_representative,
                    fig6_hrc_precision, fig7_params, fig8_latency,
@@ -63,20 +71,33 @@ def main(argv=None) -> None:
 
     clen = corpus_figures.DEFAULT_LEN[scale]
 
+    # the BENCH meta "corpus" geometry key: "synthetic", or the
+    # ingested corpus' content fingerprint at this suite's slice —
+    # compare.py treats a mismatch as a geometry change and skips
+    # cross-population comparisons (a bad --corpus-dir fails fast here,
+    # before any job burns compile time)
+    corpus = "synthetic"
+    if cdir:
+        from repro.traces import RealCorpus
+        corpus = RealCorpus(cdir).fingerprint(scale, clen)
+        print(f"corpus: {cdir} (fingerprint {corpus})")
+
     jobs = [
-        ("table1_hit_ratio", lambda: table1_hit_ratio.main(scale, clen)),
-        ("fig34_trace_sweep", lambda: fig34_trace_sweep.main(scale, clen)),
+        ("table1_hit_ratio",
+         lambda: table1_hit_ratio.main(scale, clen, cdir)),
+        ("fig34_trace_sweep",
+         lambda: fig34_trace_sweep.main(scale, clen, cdir)),
         ("fig5_representative",
-         lambda: fig5_representative.main(scale, clen)),
+         lambda: fig5_representative.main(scale, clen, cdir)),
         ("fig6_hrc_precision",
-         lambda: fig6_hrc_precision.main(scale, clen)),
-        ("fig7_params", lambda: fig7_params.main(scale, clen)),
+         lambda: fig6_hrc_precision.main(scale, clen, cdir)),
+        ("fig7_params", lambda: fig7_params.main(scale, clen, cdir)),
         ("fig8_latency", lambda: fig8_latency.main(tlen)),
-        ("fig9_midfreq", lambda: fig9_midfreq.main(scale, clen)),
-        ("corpus_sweep", lambda: corpus_sweep.main(scale, clen)),
-        ("adaptive_bench", lambda: adaptive_bench.main(scale, clen)),
+        ("fig9_midfreq", lambda: fig9_midfreq.main(scale, clen, cdir)),
+        ("corpus_sweep", lambda: corpus_sweep.main(scale, clen, cdir)),
+        ("adaptive_bench", lambda: adaptive_bench.main(scale, clen, cdir)),
         ("tiered_serving", tiered_serving.main),
-        ("serving_bench", lambda: serving_bench.main(scale)),
+        ("serving_bench", lambda: serving_bench.main(scale, cdir)),
         ("expert_prefetch", expert_prefetch.main),
         ("kernel_micro", kernel_micro.main),
     ]
@@ -105,6 +126,7 @@ def main(argv=None) -> None:
         meta={"suite": suite, "quick": suite == "quick",
               "trace_len": tlen,
               "corpus_scale": scale, "corpus_len": clen,
+              "corpus": corpus,
               "jax": jax.__version__,
               "backend": jax.default_backend(),
               "n_devices": jax.local_device_count(),

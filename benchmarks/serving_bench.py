@@ -15,7 +15,11 @@ The pipeline job (ISSUE 9) measures the async producer itself: the same
 streamed corpus through ``sweep_streaming`` with the threaded producer
 on and off, asserting bit-identity inline and recording stage timings,
 ring stall counters and overlap into the BENCH ``"streaming"`` section
-plus ``serving_<scale>_pipeline.csv``.
+plus ``serving_<scale>_pipeline.csv``. With ``--corpus-dir`` (or
+``REPRO_CORPUS_DIR``) the pipeline streams ingested volumes instead of
+synthetic ``mixed()`` streams, under a fingerprint-tagged job key; the
+tier-serving half keeps its synthetic multi-tenant page workload (a KV
+page working set is not a block trace).
 
     PYTHONPATH=src python -m benchmarks.serving_bench --scale quick
 """
@@ -31,9 +35,10 @@ from repro.cache.sweep import sweep_streaming
 from repro.cache.tiered import TieredKVCache
 from repro.core import MithrilConfig
 from repro.launch.serve import TieredServeEngine
-from repro.traces import arrival_process, mixed
+from repro.traces import (RealCorpus, arrival_process, corpus_fingerprint,
+                          mixed, resolve_corpus_dir)
 
-from .common import record_serving, record_streaming, write_csv
+from .common import job_tag, record_serving, record_streaming, write_csv
 
 # mine_rows must sit BELOW the distinct-page count of the workload: the
 # mining table only triggers when mine_rows distinct pages each reach
@@ -115,7 +120,8 @@ def serve(geo: dict, mithril: bool, seed: int = 0) -> dict:
     return eng.run()
 
 
-def pipeline_bench(scale: str, job: str) -> dict:
+def pipeline_bench(scale: str, job: str,
+                   corpus_dir: str | None = None) -> dict:
     """Async-producer overlap measurement + inline differential check.
 
     Runs the same streamed corpus through ``sweep_streaming`` twice —
@@ -124,11 +130,21 @@ def pipeline_bench(scale: str, job: str) -> dict:
     carries it) — asserts the hit curves are bit-identical, and records
     both runs' ``streaming_stats()`` (with deterministic
     ``hit_ratio_mean`` folded in) for the BENCH ``"streaming"`` gate.
+
+    ``corpus_dir`` swaps the synthetic ``mixed()`` streams for ingested
+    volumes (quick-scale even-sample, length-capped at the pipeline
+    geometry's ``stream_len``) and fingerprint-tags the job key.
     """
     geo = PIPE_SCALES[scale]
-    traces = {f"s{i:02d}": mixed(geo["stream_len"] + 137 * i,
-                                 0.3, 0.4, 0.3, seed=40 + i)
-              for i in range(geo["n_streams"])}
+    corpus_dir = resolve_corpus_dir(corpus_dir)
+    if corpus_dir:
+        sub = RealCorpus(corpus_dir).subset("quick", geo["stream_len"])
+        traces = dict(list(sub.items())[: geo["n_streams"]])
+        job = job_tag(job, corpus_fingerprint(traces))
+    else:
+        traces = {f"s{i:02d}": mixed(geo["stream_len"] + 137 * i,
+                                     0.3, 0.4, 0.3, seed=40 + i)
+                  for i in range(geo["n_streams"])}
     arrivals = arrival_process(traces, mode="onoff", burst_len=64,
                                idle_len=32, stagger=geo["chunk"], seed=7)
     arr_list = [arrivals[k] for k in traces]
@@ -165,7 +181,7 @@ def pipeline_bench(scale: str, job: str) -> dict:
     return {mode: st for mode, (_, st) in out.items()}
 
 
-def main(scale: str = "quick") -> str:
+def main(scale: str = "quick", corpus_dir: str | None = None) -> str:
     geo = SCALES[scale]
     job = f"serving_{scale}"
     rows = []
@@ -187,7 +203,7 @@ def main(scale: str = "quick") -> str:
               "tier_hit_ratio,tier_precision,tok_s,"
               "step_s_p50,step_s_p95,step_s_p99,host_s,device_wait_s",
               rows)
-    pipe = pipeline_bench(scale, f"pipeline_{scale}")
+    pipe = pipeline_bench(scale, f"pipeline_{scale}", corpus_dir)
     lru, smart = out["lru_tier"], out["mithril_tier"]
     return (f"tok={smart['tokens']};"
             f"hit_lru={lru['tier']['hit_ratio']};"
@@ -201,9 +217,13 @@ def main(scale: str = "quick") -> str:
 def _parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scale", choices=sorted(SCALES), default="quick")
+    ap.add_argument("--corpus-dir", default=None,
+                    help="ingested corpus directory: the pipeline job "
+                         "streams its volumes instead of synthetic "
+                         "mixed() streams (REPRO_CORPUS_DIR works too)")
     return ap
 
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    print(main(a.scale))
+    print(main(a.scale, a.corpus_dir))

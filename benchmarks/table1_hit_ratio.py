@@ -23,8 +23,9 @@ NAMES = ["lru", "amp-lru", "pg-lru", "mithril-lru", "mithril-amp-lru",
          "learned-lru", "learned-mithril-lru"]
 
 
-def main(scale: str = "quick", trace_len: int | None = None):
-    run = corpus_run(scale, trace_len)
+def main(scale: str = "quick", trace_len: int | None = None,
+         corpus_dir: str | None = None):
+    run = corpus_run(scale, trace_len, corpus_dir=corpus_dir)
     hrs = run.hit_ratios(NAMES)
 
     rows = improvement_summary(hrs, run.degenerate)
@@ -62,4 +63,4 @@ def _parser():
 
 if __name__ == "__main__":
     a = _parser().parse_args()
-    main(a.scale, a.trace_len)
+    main(a.scale, a.trace_len, a.corpus_dir)

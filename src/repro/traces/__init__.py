@@ -1,19 +1,25 @@
-"""Synthetic trace generators, corpus registry + io (DESIGN.md §8)."""
+"""Synthetic trace generators, corpus registry + io (DESIGN.md §8/§13)."""
 
 from .synthetic import (arrival_process, association_groups,
                         interleaved_sequential, looping, mixed, padded_suite,
                         representative_traces, stack_padded, suite, zipf)
-from .corpus import (FAMILIES, SCALES, WorkloadSpec, build_corpus,
-                     corpus_specs, corpus_suite, family_of)
-from .io import (ingest, ingest_msr_csv, ingest_raw, ingest_to_npz,
-                 load_traces, save_traces, workload_stats)
+from .corpus import (FAMILIES, INGESTED, SCALES, RealCorpus, WorkloadSpec,
+                     build_corpus, corpus_specs, corpus_suite, family_of,
+                     resolve_corpus_dir)
+from .io import (corpus_fingerprint, ingest, ingest_msr_csv, ingest_raw,
+                 ingest_to_dir, ingest_to_npz, load_corpus_dir, load_traces,
+                 read_manifest, save_traces, scan_corpus_dir, workload_stats,
+                 write_corpus_dir)
 
 __all__ = [
     "arrival_process", "association_groups", "interleaved_sequential",
     "looping", "mixed",
     "padded_suite", "representative_traces", "stack_padded", "suite", "zipf",
-    "FAMILIES", "SCALES", "WorkloadSpec", "build_corpus", "corpus_specs",
-    "corpus_suite", "family_of",
-    "ingest", "ingest_msr_csv", "ingest_raw", "ingest_to_npz",
-    "load_traces", "save_traces", "workload_stats",
+    "FAMILIES", "INGESTED", "SCALES", "RealCorpus", "WorkloadSpec",
+    "build_corpus", "corpus_specs", "corpus_suite", "family_of",
+    "resolve_corpus_dir",
+    "corpus_fingerprint", "ingest", "ingest_msr_csv", "ingest_raw",
+    "ingest_to_dir", "ingest_to_npz", "load_corpus_dir", "load_traces",
+    "read_manifest", "save_traces", "scan_corpus_dir", "workload_stats",
+    "write_corpus_dir",
 ]

@@ -26,15 +26,21 @@ across the registry so every family is represented at every scale.
 from __future__ import annotations
 
 import dataclasses
+import os
 import zlib
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from . import io as trace_io
 from .synthetic import (association_groups, interleaved_sequential, looping,
                         mixed, stack_padded, zipf)
 
 FAMILIES = ("seq", "loop", "zipf", "midfreq", "mixed")
+
+# the fallback family for traces that did not come out of the synthetic
+# registry (real ingested volumes with no family metadata)
+INGESTED = "ingested"
 
 _BUILDERS = {
     "seq": interleaved_sequential,
@@ -136,31 +142,46 @@ def corpus_specs(n_requests: int = 50_000,
 
     assert len(specs) == SCALES["full"], len(specs)
 
-    def sample(seq, n):
-        """Even sample preserving order: every family, no duplicates."""
-        idx = sorted({round(j * (len(seq) - 1) / (n - 1))
-                      for j in range(n)})
-        assert len(idx) == n, (scale, len(idx))
-        return [seq[j] for j in idx]
-
     # scales NEST (quick ⊂ mid ⊂ full): each scale samples evenly from
     # the next one up, so a trace studied at one scale exists at every
     # larger scale and per-trace trajectories are comparable across them
     if scale != "full":
-        specs = sample(specs, SCALES["mid"])
+        specs = _even_sample(specs, SCALES["mid"])
         if scale == "quick":
-            specs = sample(specs, SCALES["quick"])
+            specs = _even_sample(specs, SCALES["quick"])
     return tuple(specs)
 
 
-def family_of(name: str) -> str:
+def _even_sample(seq, n: int):
+    """Even order-preserving sample of ``n`` items (capped at ``len``).
+
+    The nested-scale rule shared by the synthetic registry and
+    :class:`RealCorpus`: indices spread evenly over the sequence, no
+    duplicates, first and last always included — so subsets NEST the
+    same way at every scale regardless of corpus origin.
+    """
+    n = min(int(n), len(seq))
+    if n <= 1:
+        return list(seq[:n])
+    idx = sorted({round(j * (len(seq) - 1) / (n - 1)) for j in range(n)})
+    assert len(idx) == n, (n, len(seq))
+    return [seq[j] for j in idx]
+
+
+def family_of(name: str, fallback: Optional[str] = None) -> str:
     """Workload family of a registry entry name (``seq012`` -> ``seq``).
 
     Registry names are ``{family}{index:03d}``; the figure layer uses
     this to aggregate per-family breakdowns without re-deriving specs.
+    Non-registry names (real ingested volumes like ``web2``) raise by
+    default; pass ``fallback`` (usually :data:`INGESTED`) to classify
+    them instead — the figure layer surfaces that family in by-family
+    CSVs rather than dropping the rows.
     """
     fam = name.rstrip("0123456789")
     if fam == name or fam not in FAMILIES:
+        if fallback is not None:
+            return fallback
         raise ValueError(f"{name!r} is not a corpus registry name "
                          f"(families: {FAMILIES})")
     return fam
@@ -180,3 +201,91 @@ def corpus_suite(scale: str = "quick", n_requests: int = 50_000):
     ``cache.sweep.sweep_scheduled``.
     """
     return stack_padded(build_corpus(corpus_specs(n_requests, scale)))
+
+
+# ---------------------------------------------------------------------------
+# Real-corpus drop-in: ingested directories behind the registry contract
+# ---------------------------------------------------------------------------
+
+class RealCorpus:
+    """An ingested corpus directory satisfying the registry contract.
+
+    A corpus directory holds canonical npz volumes plus a
+    ``manifest.json`` (``traces/io.py``: ``ingest_to_dir`` writes one,
+    ``scan_corpus_dir`` discovers/validates one; a bare directory of
+    npz files also works). ``suite(scale, n_requests)`` returns the
+    same ``(names, blocks, lengths)`` zero-padded batch as
+    :func:`corpus_suite`, so everything downstream of the registry —
+    ``plan_sweep``, ``sweep_scheduled``, the figure engine — runs
+    unchanged the moment a volume directory is present.
+
+    Contract deltas vs the synthetic registry, both deliberate:
+
+    * **scales subset, they don't generate** — ``quick``/``mid`` take
+      the registry's nested even-sample (:func:`_even_sample`, capped
+      at the volume count) of the manifest order, so per-trace
+      trajectories stay comparable across scales exactly like
+      synthetic specs;
+    * **``n_requests`` is a length CAP, not a nominal length** — real
+      traces carry their own lengths; the cap keeps quick-suite runs
+      affordable on corpus-scale volumes and is a no-op when traces
+      are shorter.
+
+    Families come from the manifest (``family_of`` with the
+    :data:`INGESTED` fallback classifies unlabeled volumes), and
+    ``fingerprint()`` hashes the *sampled, capped* suite content so
+    BENCH telemetry keys distinguish every distinct corpus geometry.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = os.path.abspath(directory)
+        self._traces, self._families = trace_io.load_corpus_dir(directory)
+        self.names: Tuple[str, ...] = tuple(self._traces)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def family(self, name: str) -> str:
+        """Manifest family of a volume, :data:`INGESTED` when absent."""
+        return self._families.get(name, INGESTED)
+
+    def subset_names(self, scale: str = "full") -> Tuple[str, ...]:
+        """The nested even-sample of volume names at a registry scale."""
+        if scale not in SCALES:
+            raise ValueError(
+                f"unknown scale {scale!r}; expected {set(SCALES)}")
+        names = list(self.names)
+        if scale != "full":
+            names = _even_sample(names, SCALES["mid"])
+            if scale == "quick":
+                names = _even_sample(names, SCALES["quick"])
+        return tuple(names)
+
+    def subset(self, scale: str = "full",
+               n_requests: Optional[int] = None) -> Dict[str, np.ndarray]:
+        """The sampled, length-capped traces as a name->blocks dict
+        (manifest order) — the raw-dict form for stream consumers."""
+        cap = int(n_requests) if n_requests else None
+        return {k: (self._traces[k][:cap] if cap else self._traces[k])
+                for k in self.subset_names(scale)}
+
+    def suite(self, scale: str = "full",
+              n_requests: Optional[int] = None):
+        """``(names, blocks, lengths)`` — the :func:`corpus_suite` form."""
+        return stack_padded(self.subset(scale, n_requests))
+
+    def fingerprint(self, scale: str = "full",
+                    n_requests: Optional[int] = None) -> str:
+        """Content hash of the sampled/capped suite (BENCH job key)."""
+        return trace_io.corpus_fingerprint(self.subset(scale, n_requests))
+
+
+def resolve_corpus_dir(corpus_dir: Optional[str] = None) -> Optional[str]:
+    """The active ingested-corpus directory, or None for synthetic.
+
+    Resolution order: the explicit ``--corpus-dir`` argument, then the
+    ``REPRO_CORPUS_DIR`` environment variable — one switch flips every
+    figure driver, ``corpus_sweep``, ``adaptive_bench`` and the
+    streaming pipeline job onto real traces.
+    """
+    return corpus_dir or os.environ.get("REPRO_CORPUS_DIR") or None

@@ -34,6 +34,11 @@ SRC = os.path.join(ROOT, "src", "repro")
 FLOOR_FILE = os.path.join(ROOT, "results", "coverage_floor.txt")
 MARGIN = 3  # percentage points: tool-skew headroom vs real coverage.py
 
+# tests import ``benchmarks``; ``python tools/...`` puts tools/ (not the
+# repo root) on sys.path, unlike ``python -m pytest`` which adds the cwd
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
 _executed = set()
 
 
